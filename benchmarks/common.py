@@ -1,0 +1,117 @@
+"""Shared benchmark scaffolding.
+
+Every ``benchmarks/<name>.py`` module exposes ``run(quick=True) -> dict``;
+``benchmarks.run`` drives them all and writes results JSON under
+``results/``. ``quick=True`` shrinks sample counts so the full suite
+completes on CPU in minutes; ``quick=False`` is the paper-scale setting.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.config import (
+    CLOUD_1080TI,
+    EDGE_TK1,
+    EDGE_TX2,
+    JaladConfig,
+    get_config,
+)
+from repro.core.latency import LatencyModel
+from repro.core.predictor import PredictorTables, build_tables
+from repro.data.synthetic import ImageStream, make_batch
+from repro.models.api import Model, build_model
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+CNN_MODELS = ["vgg16", "vgg19", "resnet50", "resnet101"]
+BITS_FULL = (2, 3, 4, 5, 6, 8)
+BITS_QUICK = (2, 4, 8)
+
+
+def save_result(name: str, payload: Dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+_TABLE_CACHE: Dict = {}
+
+
+def cnn_setup(arch: str, quick: bool = True, seed: int = 0):
+    """(model, params, tables, latency_factory) for one CNN testbed model.
+
+    Full-size CNNs forward slowly on CPU; quick mode uses a reduced image
+    size (the depth/topology — hence the decoupling-point structure — is
+    unchanged) and fewer calibration samples. The FMAC latency model always
+    uses the FULL 224x224 geometry, exactly the paper's Sec. IV-A numbers.
+    """
+    key = (arch, quick, seed)
+    if key in _TABLE_CACHE:
+        return _TABLE_CACHE[key]
+    cfg_full = get_config(arch)
+    cfg_run = cfg_full.replace(image_size=64) if quick else cfg_full
+    model = build_model(cfg_run)
+    params = model.init(jax.random.key(seed))
+    bits = BITS_QUICK if quick else BITS_FULL
+    n_batches = 1 if quick else 4
+    bsz = 4 if quick else 16
+    batches = [make_batch(cfg_run, bsz, 0, seed=seed + i)
+               for i in range(n_batches)]
+    points = _subsample_points(model, 10 if quick else 24)
+    tables = build_tables(model, params, batches, list(bits), points=points)
+
+    # Latency bookkeeping at full ImageNet geometry, batch of 1 sample
+    # (paper reports per-sample latency; 100-sample batches scale linearly).
+    # FULL-length per-point FMACs: JaladEngine indexes the cumulative
+    # edge/cloud time vectors by global point id (point_indices maps the
+    # sampled table rows onto them).
+    model_full = build_model(cfg_full)
+    fmacs = model_full.per_point_fmacs(1)
+    input_bytes = 3.0 * cfg_full.image_size ** 2  # 24-bit RGB
+
+    def latency_for(edge_profile):
+        return LatencyModel(fmacs, edge_profile, CLOUD_1080TI, input_bytes)
+
+    # Rescale S_i(c) from the calibration geometry to full-res per-sample
+    # bytes: feature bytes scale with (H*W), i.e. (224/64)^2 in quick mode.
+    scale = (cfg_full.image_size / cfg_run.image_size) ** 2 / bsz
+    tables = PredictorTables(
+        points=tables.points,
+        bits_choices=tables.bits_choices,
+        acc_drop=tables.acc_drop,
+        size_bytes=tables.size_bytes * scale,
+        base_accuracy=tables.base_accuracy,
+    )
+    out = (model_full, params, tables, latency_for, points)
+    _TABLE_CACHE[key] = out
+    return out
+
+
+def _subsample_points(model: Model, max_points: int) -> List[int]:
+    n = len(model.decoupling_points())
+    if n <= max_points:
+        return list(range(n))
+    step = max(n // max_points, 1)
+    pts = list(range(0, n, step))
+    if (n - 1) not in pts:
+        pts.append(n - 1)
+    return pts
+
+
+def fmt_table(rows: List[List], header: List[str]) -> str:
+    widths = [
+        max(len(str(r[i])) for r in [header] + rows)
+        for i in range(len(header))
+    ]
+    def fmt_row(r):
+        return " | ".join(str(c).ljust(w) for c, w in zip(r, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    return "\n".join([fmt_row(header), sep] + [fmt_row(r) for r in rows])

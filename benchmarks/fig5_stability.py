@@ -1,0 +1,54 @@
+"""Fig. 5 — predictor stability: A_i(c) and S_i(c) measured on different
+data epochs overlap, so a one-shot lookup table is sound."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result
+from repro.config import get_config
+from repro.core.predictor import build_tables
+from repro.data.synthetic import make_batch
+from repro.models.api import build_model
+
+
+def run(quick: bool = True) -> dict:
+    cfg = get_config("resnet50").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    bits = [8]
+    epochs = 2 if quick else 5
+    bsz = 16 if quick else 64
+    tabs = []
+    for e in range(epochs):
+        batches = [make_batch(cfg, bsz, 0, seed=1000 * e + i)
+                   for i in range(1 if quick else 3)]
+        tabs.append(build_tables(model, params, batches, bits))
+    sizes = np.stack([t.size_bytes[:, 0] for t in tabs])   # (E, N)
+    accs = np.stack([t.acc_drop[:, 0] for t in tabs])
+    size_rel_spread = (sizes.max(0) - sizes.min(0)) / sizes.mean(0)
+    acc_spread = accs.max(0) - accs.min(0)
+    out = {
+        "epochs": epochs,
+        "size_rel_spread_median": float(np.median(size_rel_spread)),
+        "size_rel_spread_max": float(size_rel_spread.max()),
+        "acc_spread_median": float(np.median(acc_spread)),
+        "acc_spread_max": float(acc_spread.max()),
+    }
+    print("\nFig. 5 — predictor stability across epochs (c=8)")
+    print(fmt_table(
+        [[f"{out['size_rel_spread_median']:.3f}",
+          f"{out['size_rel_spread_max']:.3f}",
+          f"{out['acc_spread_median']:.3f}",
+          f"{out['acc_spread_max']:.3f}"]],
+        ["size spread (med)", "size spread (max)",
+         "acc spread (med)", "acc spread (max)"],
+    ))
+    # Paper: "results of different epochs are highly overlapped".
+    assert out["size_rel_spread_median"] < 0.1
+    save_result("fig5_stability", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

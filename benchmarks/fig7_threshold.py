@@ -1,0 +1,44 @@
+"""Fig. 7 — accuracy threshold Δα versus achieved latency: as the budget
+loosens, JALAD finds faster decouplings (more aggressive quantization or a
+better cut)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cnn_setup, fmt_table, save_result
+from repro.config import EDGE_TX2, JaladConfig
+from repro.core.decoupler import JaladEngine
+from repro.core.latency import PNG_RATIO
+
+
+def run(quick: bool = True) -> dict:
+    arch = "resnet50"
+    model, params, tables, latency_for, points = cnn_setup(arch, quick)
+    lat = latency_for(EDGE_TX2)
+    bw = 300e3
+    budgets = [0.0, 0.01, 0.02, 0.05, 0.10, 0.20]
+    out = {"arch": arch, "bandwidth": bw, "budgets": budgets, "latency": [],
+           "plan": []}
+    rows = []
+    for da in budgets:
+        jc = JaladConfig(bits_choices=tuple(tables.bits_choices),
+                         accuracy_drop_budget=da, bandwidth_bytes_per_s=bw)
+        engine = JaladEngine(model, tables, lat, jc, point_indices=points)
+        plan = engine.decide(bw)
+        t = (plan.predicted_latency if not plan.is_cloud_only
+             else lat.cloud_only_time(bw, PNG_RATIO))
+        out["latency"].append(t)
+        out["plan"].append([plan.point, plan.bits])
+        rows.append([f"{da:.2f}", f"{t*1e3:.1f}ms", plan.point, plan.bits,
+                     f"{plan.predicted_acc_drop:.3f}"])
+    print("\nFig. 7 — latency vs accuracy budget Δα (300 KB/s)")
+    print(fmt_table(rows, ["Δα", "latency", "cut", "bits", "pred drop"]))
+    # Monotone: a looser budget can never be slower.
+    lats = out["latency"]
+    assert all(lats[i + 1] <= lats[i] + 1e-9 for i in range(len(lats) - 1))
+    save_result("fig7_threshold", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

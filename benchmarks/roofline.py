@@ -1,0 +1,110 @@
+"""Roofline table (deliverable g): per (arch x shape), the three roofline
+terms on the single-pod 16x16 v5e mesh.
+
+Primary source: the dry-run JSONL records under results/ (produced by
+``python -m repro.launch.dryrun --all --out results/dryrun_1pod.jsonl``,
+which lowers + compiles every combination and parses the compiled HLO).
+When a combo has no record yet, an analytic-only row (compute & HBM terms
+from the model's own accounting, collective term marked n/a) is shown so
+the table is always complete.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, fmt_table, save_result
+from repro.config import (
+    INPUT_SHAPES,
+    TPU_V5E,
+    TPU_V5E_HBM_BW,
+    get_config,
+)
+from repro.config.registry import assigned_archs
+from repro.models.api import build_model
+
+DRYRUN_FILES = ["dryrun_1pod.jsonl"]
+CHIPS = 256
+
+
+def load_dryrun_records() -> Dict:
+    recs = {}
+    for fname in DRYRUN_FILES:
+        path = os.path.join(RESULTS_DIR, fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def analytic_row(arch: str, shape_name: str) -> Dict:
+    """Compute/memory terms without a compiled artifact (no collectives)."""
+    model = build_model(get_config(arch))
+    shape = INPUT_SHAPES[shape_name]
+    flops = model.analytic_step_flops(
+        shape, block_remat=(shape.mode == "train"))
+    # HBM traffic lower bound: params read once + activations/caches.
+    nbytes = 2.0 * model.param_count()
+    if shape.mode == "decode":
+        cache = model.input_specs(shape)["caches"]
+        import jax
+        nbytes += sum(
+            np.prod(l.shape) * l.dtype.itemsize
+            for l in jax.tree.leaves(cache)
+        )
+    compute_s = flops / CHIPS / TPU_V5E.flops
+    memory_s = nbytes / CHIPS / TPU_V5E_HBM_BW
+    return {
+        "arch": arch, "shape": shape_name, "mesh": "16x16", "chips": CHIPS,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": float("nan"),
+        "dominant": "compute" if compute_s > memory_s else "memory",
+        "model_flops_global": model.model_flops(
+            shape.global_batch * (shape.seq_len
+                                  if shape.mode != "decode" else 1)),
+        "useful_flops_fraction": float("nan"),
+        "hbm_gib_per_device": nbytes / CHIPS / 2**30,
+        "source": "analytic",
+    }
+
+
+def run(quick: bool = True) -> dict:
+    recs = load_dryrun_records()
+    rows = []
+    out = {}
+    for arch in assigned_archs():
+        for shape_name in INPUT_SHAPES:
+            r = recs.get((arch, shape_name))
+            if r is None:
+                r = analytic_row(arch, shape_name)
+            src = r.get("source", "dryrun")
+            out[f"{arch}|{shape_name}"] = r
+            coll = r.get("collective_s", float("nan"))
+            rows.append([
+                arch, shape_name,
+                f"{r['compute_s']*1e3:9.2f}",
+                f"{r['memory_s']*1e3:9.2f}",
+                f"{coll*1e3:9.2f}" if coll == coll else "      n/a",
+                r["dominant"],
+                f"{r.get('useful_flops_fraction', float('nan')):.2f}",
+                src,
+            ])
+    print("\nRoofline terms per (arch x shape), 16x16 v5e pod "
+          "(ms per step, per device)")
+    print(fmt_table(rows, ["arch", "shape", "compute", "memory",
+                           "collective", "dominant", "useful", "src"]))
+    n_dryrun = sum(1 for v in out.values() if v.get("source") != "analytic")
+    print(f"\n{n_dryrun}/40 rows from compiled dry-run artifacts, "
+          f"{40 - n_dryrun} analytic-only")
+    save_result("roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

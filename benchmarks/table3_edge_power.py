@@ -1,0 +1,43 @@
+"""Table III — impact of edge compute power (simulation, Sec. IV-E):
+NVIDIA Tegra K1 (300 GFLOPs) vs Tegra X2 (2 TFLOPs) at 1 MBps.
+
+Paper observation: the X2 gains much more ("JALAD achieves more execution
+speedup gain under the high-performance edge device"); with the K1 some
+networks (VGG) cannot benefit from decoupling (speedup ~1.0x vs PNG)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CNN_MODELS, fmt_table, save_result
+from repro.config import EDGE_TK1, EDGE_TX2
+from benchmarks.table2_speedup import speedups
+
+
+def run(quick: bool = True) -> dict:
+    out = {}
+    rows = []
+    for arch in CNN_MODELS:
+        k1_png, k1_org, k1_plan, _ = speedups(arch, 1e6, quick, edge=EDGE_TK1)
+        x2_png, x2_org, x2_plan, _ = speedups(arch, 1e6, quick, edge=EDGE_TX2)
+        out[arch] = {
+            "tk1": {"png_x": k1_png, "origin_x": k1_org,
+                    "plan": [k1_plan.point, k1_plan.bits]},
+            "tx2": {"png_x": x2_png, "origin_x": x2_org,
+                    "plan": [x2_plan.point, x2_plan.bits]},
+        }
+        rows.append([arch, f"{k1_png:.1f}x/{k1_org:.1f}x",
+                     f"{x2_png:.1f}x/{x2_org:.1f}x"])
+    print("\nTable III — edge power impact at 1 MB/s (PNG/Origin speedup)")
+    print(fmt_table(rows, ["model", "Tegra K1", "Tegra X2"]))
+    # X2 speedups dominate K1 speedups (more edge compute => deeper cuts).
+    for arch in CNN_MODELS:
+        assert out[arch]["tx2"]["png_x"] >= out[arch]["tk1"]["png_x"] - 1e-9
+    # K1 never does worse than cloud-only (falls back to upload).
+    for arch in CNN_MODELS:
+        assert out[arch]["tk1"]["png_x"] >= 1.0 - 1e-9
+    save_result("table3_edge_power", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""JALAD beyond CNNs: decouple every assigned architecture family.
+
+  PYTHONPATH=src python examples/multiarch_decoupling.py
+
+For each family (dense / MoE / SSM / hybrid / VLM / audio, reduced sizes)
+this example: picks a mid-network cut, quantizes the boundary hidden state
+to 4 bits, runs head+compress+tail, and reports transfer bytes + top-1
+agreement with the undecoupled model — the paper's technique as a generic
+architecture-level capability.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config
+from repro.core.decoupler import DecoupledPlan, DecoupledRunner
+from repro.data.synthetic import make_batch
+from repro.models.api import build_model
+
+ARCHS = ["olmo-1b", "grok-1-314b", "xlstm-1.3b", "zamba2-2.7b",
+         "qwen2-vl-7b", "seamless-m4t-large-v2"]
+
+print(f"{'arch':28s} {'family':7s} {'cut':>4} {'raw B':>9} {'sent B':>8} "
+      f"{'ratio':>6} {'agree':>6}")
+for arch in ARCHS:
+    import jax
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = {
+        k: jnp.asarray(v) for k, v in make_batch(cfg, 2, 24, seed=1).items()
+    }
+    n = len(model.decoupling_points())
+    plan = DecoupledPlan(n // 2, 4, 0.0, 0.0, 0.0)
+    runner = DecoupledRunner(model, params, plan)
+    logits, sent = runner.run(batch)
+    full = model.forward(params, batch)
+    agree = float(
+        (np.asarray(logits).argmax(-1) == np.asarray(full).argmax(-1)).mean()
+    )
+    out = model.run_head(params, batch, plan.point)
+    boundary = out[0] if isinstance(out, tuple) else out
+    raw = np.asarray(boundary).nbytes
+    print(f"{arch:28s} {cfg.family:7s} {plan.point:4d} {raw:9d} {sent:8d} "
+          f"{raw/sent:5.1f}x {agree:6.2%}")
+print("\nJALAD's cut+compress applies to every assigned family "
+      "(Sec. Arch-applicability in DESIGN.md)")

@@ -1,0 +1,102 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimb driver: re-lower one (arch x shape) under a named
+sharding/execution variant and print the roofline terms, for the
+hypothesis -> change -> measure -> validate loop recorded in
+EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python scripts/hillclimb.py olmo-1b train_4k baseline
+  PYTHONPATH=src python scripts/hillclimb.py olmo-1b train_4k pure_dp
+  PYTHONPATH=src python scripts/hillclimb.py xlstm-1.3b decode_32k tp_weights
+"""
+import json
+import sys
+
+from repro.config import INPUT_SHAPES, TrainConfig
+from repro.launch.dryrun import dryrun_one
+from repro.sharding.rules import DEFAULT_RULES
+
+# ---------------------------------------------------------------------------
+# Rule-table variants (each is a full replacement table)
+# ---------------------------------------------------------------------------
+
+
+def _patched(**kw):
+    rules = {k: list(v) for k, v in DEFAULT_RULES.items()}
+    rules.update(kw)
+    return rules
+
+
+VARIANTS = {
+    # the shipped default: FSDP(+TP) weights, data-parallel batch
+    "baseline": None,
+
+    # pure data parallelism over all 256 chips: batch 256-way, weights
+    # replicated except the (huge) vocab dim. Kills the Megatron per-layer
+    # partial-sum all-reduces and the FSDP weight all-gathers; costs one
+    # grad all-reduce over the full parameter set.
+    "pure_dp": _patched(
+        batch=[("pod", "data", "model"), ("data", "model"), ("data",)],
+        ffn=[], heads=[], kv_heads=[], expert=[],
+        ssm_in=[], ssm_qk=[], conv_out=[],
+        vocab=[("model",)], kv_seq=[],
+    ),
+
+    # FSDP weights but no tensor parallelism (ZeRO-3-ish): weights shard
+    # over both axes for storage, batch over both axes for compute.
+    "fsdp_dp": _patched(
+        batch=[("pod", "data", "model"), ("data", "model"), ("data",)],
+        ffn=[("data", "model"), ("model",), ("data",)],
+        heads=[], kv_heads=[],
+        kv_seq=[],
+    ),
+
+    # decode-oriented: weights tensor-parallel ONLY (no "data" in weight
+    # candidates => no per-step FSDP all-gathers), batch on data.
+    "tp_weights": _patched(
+        ffn=[("model",)], vocab=[("model",)], expert=[("model",)],
+        ssm_in=[("model",)], conv_out=[("model",)], heads=[("model",)],
+    ),
+
+    # decode-oriented: fully replicated weights (max memory, zero weight
+    # collectives) — the "small model, many requests" serving layout.
+    "replicated": _patched(
+        ffn=[], vocab=[], expert=[], ssm_in=[], ssm_qk=[], conv_out=[],
+        heads=[], kv_heads=[],
+    ),
+
+    # tp_weights + recurrent-state sharding: the xLSTM matrix state
+    # (B, h, dh, dh) has dh=512 — shard its head_dim on "model" so the
+    # per-step state read is 16x smaller per device. (Attention KV caches
+    # are unaffected: their kv_seq dim claims "model" first by priority.)
+    "tp_state": _patched(
+        ffn=[("model",)], vocab=[("model",)], expert=[("model",)],
+        ssm_in=[("model",)], conv_out=[("model",)], heads=[("model",)],
+        head_dim=[("model",)],
+    ),
+}
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variant = sys.argv[3]            # rule-table variant, may end in "+kv8"
+    micro = int(sys.argv[4]) if len(sys.argv) > 4 else 1
+    remat = sys.argv[5] if len(sys.argv) > 5 else "blocks"
+    overrides = {}
+    if variant.endswith("+kv8"):
+        overrides["kv_cache_bits"] = 8
+        rules_name = variant[:-4] or "baseline"
+    else:
+        rules_name = variant
+    tc = TrainConfig(remat=remat, microbatches=micro)
+    rec = dryrun_one(arch, shape, train_cfg=tc, rules=VARIANTS[rules_name],
+                     unroll=True, overrides=overrides or None)
+    rec["variant"] = variant
+    rec["remat"] = remat
+    rec["microbatches"] = micro
+    with open("results/hillclimb.jsonl", "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Render EXPERIMENTS.md §Roofline table from results/dryrun_1pod.jsonl."""
+import json
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(path="results/dryrun_1pod.jsonl"):
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"])] = r
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | useful | HBM GiB/dev | source |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---|")
+    for arch in sorted({a for a, _ in recs}):
+        for shape in ORDER:
+            r = recs.get((arch, shape))
+            if not r:
+                print(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                      f"MISSING |")
+                continue
+            src = r.get("source", "dry-run")
+            print(f"| {arch} | {shape} | {r['compute_s']*1e3:.2f} | "
+                  f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+                  f"{r['dominant']} | "
+                  f"{r.get('useful_flops_fraction', 0):.2f} | "
+                  f"{r.get('hbm_gib_per_device', 0):.2f} | {src} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

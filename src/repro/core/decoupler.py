@@ -1,0 +1,150 @@
+"""Deep-structure decoupling: split a model at point i*, quantize the
+boundary to c bits, and run head (edge) / tail (cloud) as separate jitted
+functions — plus the engine that glues predictors + latency model + ILP
+into the paper's decision procedure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.types import JaladConfig
+from repro.core import compression as comp
+from repro.core.ilp import ILPProblem, ILPSolution, solve
+from repro.core.latency import LatencyModel
+from repro.core.predictor import PredictorTables
+from repro.core.quantization import quantize_dequantize
+from repro.models.api import Model
+
+
+@dataclass
+class DecoupledPlan:
+    """The outcome of one ILP solve: where to cut and at what bit width."""
+
+    point: int
+    bits: int
+    predicted_latency: float
+    predicted_acc_drop: float
+    solve_ms: float
+
+    @property
+    def is_cloud_only(self) -> bool:
+        return self.point < 0
+
+
+@dataclass
+class DecoupledRunner:
+    """Executable split model. ``edge_step`` runs on the edge device and
+    returns the compressed boundary; ``cloud_step`` finishes the inference.
+    ``run`` wires them together (with exact compressed-size accounting)."""
+
+    model: Model
+    params: Any
+    plan: DecoupledPlan
+
+    def __post_init__(self):
+        self._head = jax.jit(self.model.run_head, static_argnums=2)
+        self._tail = jax.jit(self.model.run_tail, static_argnums=2)
+
+    def edge_step(self, batch) -> Tuple[comp.CompressedFeatures, Any]:
+        out = self._head(self.params, batch, self.plan.point)
+        boundary, extras = out if isinstance(out, tuple) else (out, None)
+        blob = comp.compress(np.asarray(boundary), self.plan.bits)
+        return blob, extras
+
+    def cloud_step(self, blob: comp.CompressedFeatures, extras=None):
+        boundary = jnp.asarray(comp.decompress(blob))
+        boundary = boundary.astype(jnp.dtype(self.model.cfg.dtype))
+        if extras is not None:
+            return self._tail(self.params, boundary, self.plan.point, extras)
+        return self._tail(self.params, boundary, self.plan.point)
+
+    def run(self, batch):
+        """Full decoupled inference; returns (logits, transfer_bytes)."""
+        blob, extras = self.edge_step(batch)
+        logits = self.cloud_step(blob, extras)
+        return logits, blob.nbytes
+
+    def run_simulated(self, batch):
+        """jit-friendly end-to-end path: quantize-dequantize in-graph (no
+        host Huffman round trip). Numerically identical boundary values."""
+        out = self._head(self.params, batch, self.plan.point)
+        boundary, extras = out if isinstance(out, tuple) else (out, None)
+        xq = quantize_dequantize(boundary, self.plan.bits)
+        xq = xq.astype(jnp.dtype(self.model.cfg.dtype))
+        if extras is not None:
+            return self._tail(self.params, xq, self.plan.point, extras)
+        return self._tail(self.params, xq, self.plan.point)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent-state compression (SSM/hybrid decode across the cut)
+# ---------------------------------------------------------------------------
+
+
+def compress_state(caches, bits: int):
+    """JALAD extension for SSM decode: the recurrent state that crosses the
+    cut is itself quantized (per-leaf min-max)."""
+    return jax.tree.map(
+        lambda a: quantize_dequantize(a, bits).astype(a.dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating)
+        else a,
+        caches,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decision engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class JaladEngine:
+    """Holds the predictor tables + latency model and answers "where do we
+    cut right now?" for the current bandwidth (paper Sec. III-E)."""
+
+    model: Model
+    tables: PredictorTables
+    latency: LatencyModel
+    cfg: JaladConfig
+    point_indices: Optional[List[int]] = None   # tables row -> model point
+
+    def ilp_problem(self, bandwidth: float) -> ILPProblem:
+        te = self.latency.edge_times()
+        tc = self.latency.cloud_times()
+        rows = self.point_indices or list(range(len(self.tables.points)))
+        te = te[rows]
+        tc = tc[rows]
+        ttrans = self.tables.size_bytes / float(bandwidth)
+        cost = te[:, None] + tc[:, None] + ttrans
+        return ILPProblem(cost, self.tables.acc_drop,
+                          self.cfg.accuracy_drop_budget)
+
+    def decide(self, bandwidth: Optional[float] = None,
+               method: str = "enumeration") -> DecoupledPlan:
+        bw = bandwidth if bandwidth is not None else \
+            self.cfg.bandwidth_bytes_per_s
+        problem = self.ilp_problem(bw)
+        sol = solve(problem, method)
+        if sol is None:
+            # Infeasible => fall back to cloud-only (paper's worst case is
+            # x_{NC} = 1, i.e. effectively no decoupling).
+            return DecoupledPlan(-1, 0,
+                                 self.latency.cloud_only_time(bw), 0.0, 0.0)
+        rows = self.point_indices or list(range(len(self.tables.points)))
+        return DecoupledPlan(
+            point=rows[sol.point],
+            bits=self.tables.bits_choices[sol.bits_index],
+            predicted_latency=sol.objective,
+            predicted_acc_drop=float(
+                self.tables.acc_drop[sol.point, sol.bits_index]
+            ),
+            solve_ms=sol.solve_ms,
+        )
+
+    def make_runner(self, params, plan: DecoupledPlan) -> DecoupledRunner:
+        return DecoupledRunner(self.model, params, plan)

@@ -1,0 +1,169 @@
+"""Entropy coding of quantized feature maps (paper Sec. III-B, "Compression
+of integer feature maps").
+
+Two pieces:
+
+* A real canonical-Huffman codec (host-side numpy: build tree from symbol
+  frequencies, encode to a packed bitstream, decode back). This is what the
+  edge device's CPU runs in the paper, and what the serving runtime uses.
+* A jit-able Shannon-entropy size *estimator* used inside jitted paths and
+  by the size predictor S_i(c): the Huffman length of an i.i.d. source is
+  within [H, H+1) bits/symbol, so ``entropy_size_bytes`` is a tight,
+  differentiable-in-spirit stand-in (tests assert the sandwich).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Canonical Huffman codec (numpy, host side)
+# ---------------------------------------------------------------------------
+
+
+def _code_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Huffman code length per symbol (0 for absent symbols)."""
+    sym = np.nonzero(freqs)[0]
+    if len(sym) == 0:
+        return np.zeros_like(freqs)
+    if len(sym) == 1:
+        lengths = np.zeros_like(freqs)
+        lengths[sym[0]] = 1
+        return lengths
+    # heap of (freq, counter, [symbols...]) merging; track depth per symbol.
+    depth = {int(s): 0 for s in sym}
+    heap = [(int(freqs[s]), i, [int(s)]) for i, s in enumerate(sym)]
+    heapq.heapify(heap)
+    counter = len(heap)
+    while len(heap) > 1:
+        f1, _, s1 = heapq.heappop(heap)
+        f2, _, s2 = heapq.heappop(heap)
+        for s in s1 + s2:
+            depth[s] += 1
+        heapq.heappush(heap, (f1 + f2, counter, s1 + s2))
+        counter += 1
+    lengths = np.zeros_like(freqs)
+    for s, d in depth.items():
+        lengths[s] = d
+    return lengths
+
+
+def _canonical_codes(lengths: np.ndarray) -> Dict[int, Tuple[int, int]]:
+    """Canonical code assignment: {symbol: (code, length)}."""
+    order = sorted(
+        (int(l), int(s)) for s, l in enumerate(lengths) if l > 0
+    )
+    codes: Dict[int, Tuple[int, int]] = {}
+    code = 0
+    prev_len = 0
+    for length, s in order:
+        code <<= length - prev_len
+        codes[s] = (code, length)
+        code += 1
+        prev_len = length
+    return codes
+
+
+def huffman_encode(codes_arr: np.ndarray, num_symbols: int) -> bytes:
+    """Encode int array (values in [0, num_symbols)) to bytes.
+
+    Layout: [u32 n][u16 num_symbols][u8 lengths per symbol][bitstream].
+    """
+    flat = np.asarray(codes_arr, np.int64).reshape(-1)
+    freqs = np.bincount(flat, minlength=num_symbols).astype(np.int64)
+    lengths = _code_lengths(freqs)
+    table = _canonical_codes(lengths)
+
+    header = (
+        np.uint32(flat.size).tobytes()
+        + np.uint16(num_symbols).tobytes()
+        + lengths.astype(np.uint8).tobytes()
+    )
+    if not table:
+        return header
+
+    # Vectorized bit emission.
+    code_of = np.zeros(num_symbols, np.uint64)
+    len_of = np.zeros(num_symbols, np.uint64)
+    for s, (c, l) in table.items():
+        code_of[s], len_of[s] = c, l
+    sym_codes = code_of[flat]
+    sym_lens = len_of[flat]
+    ends = np.cumsum(sym_lens)
+    total_bits = int(ends[-1])
+    starts = ends - sym_lens
+    bits = np.zeros(total_bits, np.uint8)
+    # Expand each symbol's code MSB-first into the bit array.
+    max_len = int(sym_lens.max())
+    for l in range(1, max_len + 1):
+        mask = sym_lens == l
+        if not mask.any():
+            continue
+        s0 = starts[mask]
+        c0 = sym_codes[mask]
+        for j in range(l):
+            bits[s0 + j] = (c0 >> np.uint64(l - 1 - j)) & np.uint64(1)
+    return header + np.packbits(bits).tobytes()
+
+
+def huffman_decode(data: bytes) -> np.ndarray:
+    n = int(np.frombuffer(data[:4], np.uint32)[0])
+    num_symbols = int(np.frombuffer(data[4:6], np.uint16)[0])
+    lengths = np.frombuffer(data[6 : 6 + num_symbols], np.uint8).astype(
+        np.int64
+    )
+    table = _canonical_codes(lengths)
+    out = np.zeros(n, np.int64)
+    if not table or n == 0:
+        return out
+    # Invert: (length, code) -> symbol.
+    inv = {(l, c): s for s, (c, l) in table.items()}
+    bits = np.unpackbits(
+        np.frombuffer(data[6 + num_symbols :], np.uint8)
+    )
+    code, length, j, i = 0, 0, 0, 0
+    while j < n:
+        code = (code << 1) | int(bits[i])
+        i += 1
+        length += 1
+        sym = inv.get((length, code))
+        if sym is not None:
+            out[j] = sym
+            j += 1
+            code, length = 0, 0
+    return out
+
+
+def huffman_size_bytes(codes_arr: np.ndarray, num_symbols: int) -> int:
+    """Exact encoded size without materializing the bitstream."""
+    flat = np.asarray(codes_arr, np.int64).reshape(-1)
+    freqs = np.bincount(flat, minlength=num_symbols).astype(np.int64)
+    lengths = _code_lengths(freqs)
+    total_bits = int((freqs * lengths).sum())
+    return 6 + num_symbols + (total_bits + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# jit-able Shannon size estimator
+# ---------------------------------------------------------------------------
+
+
+def entropy_bits_per_symbol(codes: jnp.ndarray, num_symbols: int) -> jnp.ndarray:
+    """Empirical Shannon entropy H (bits/symbol) of an integer code array."""
+    flat = codes.reshape(-1)
+    counts = jnp.zeros(num_symbols, jnp.float32).at[flat].add(1.0)
+    p = counts / flat.shape[0]
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0))
+
+
+def entropy_size_bytes(codes: jnp.ndarray, num_symbols: int) -> jnp.ndarray:
+    """Shannon lower bound on the Huffman-coded size, plus table header.
+    Huffman actual size lies in [this, this + n/8 bytes)."""
+    n = codes.size
+    h = entropy_bits_per_symbol(codes, num_symbols)
+    return (h * n) / 8.0 + 6 + num_symbols

@@ -1,0 +1,75 @@
+"""Execution-latency model (paper Sec. III-D / IV-A).
+
+Edge and cloud execution times follow the paper's FMAC model
+``T = w * Q / F`` (Sec. IV-A: this linear approximation is credible since
+FMACs take >90% of execution time). Transmission is ``S_i(c) / BW``.
+
+``LatencyModel`` produces the {T_E_i}, {T_C_i} vectors the ILP consumes,
+plus the paper's baselines (Origin2Cloud / PNG2Cloud / JPEG2Cloud).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.config.types import DeviceProfile
+
+# Reference compressed-image ratios vs 24-bit raw RGB (paper Sec. I uses a
+# ~2.4 MB raw -> ~1 MB PNG example; JPEG is far smaller).
+PNG_RATIO = 0.42
+JPEG_RATIO = 0.10
+
+
+@dataclass
+class LatencyModel:
+    """Latency bookkeeping for one model on one (edge, cloud, BW) setup."""
+
+    fmacs_per_point: Sequence[float]     # layer i's own FMACs (batch included)
+    edge: DeviceProfile
+    cloud: DeviceProfile
+    input_bytes: float                   # raw input size (batch included)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_points(self) -> int:
+        return len(self.fmacs_per_point)
+
+    def edge_times(self) -> np.ndarray:
+        """T_E_i: run layers 1..i on the edge (cumulative)."""
+        cum = np.cumsum(np.asarray(self.fmacs_per_point, np.float64))
+        return np.array([self.edge.exec_time(q) for q in cum])
+
+    def cloud_times(self) -> np.ndarray:
+        """T_C_i: run layers i+1..N on the cloud."""
+        f = np.asarray(self.fmacs_per_point, np.float64)
+        total = f.sum()
+        cum = np.cumsum(f)
+        return np.array([self.cloud.exec_time(total - q) for q in cum])
+
+    def trans_times(self, size_table: np.ndarray, bandwidth: float
+                    ) -> np.ndarray:
+        """T_trans[i, c] = S_i(c) / BW."""
+        return np.asarray(size_table, np.float64) / float(bandwidth)
+
+    # ----------------------------------------------------------- baselines
+    def cloud_only_time(self, bandwidth: float, image_ratio: float = 1.0
+                        ) -> float:
+        """Upload (possibly image-compressed) input, run everything on the
+        cloud. image_ratio=1 -> Origin2Cloud; PNG_RATIO -> PNG2Cloud."""
+        upload = self.input_bytes * image_ratio / bandwidth
+        compute = self.cloud.exec_time(float(np.sum(self.fmacs_per_point)))
+        return upload + compute
+
+    def edge_only_time(self) -> float:
+        return self.edge.exec_time(float(np.sum(self.fmacs_per_point)))
+
+    def total_time(self, i: int, c_idx: int, size_table: np.ndarray,
+                   bandwidth: float) -> float:
+        """Z for a concrete decoupling decision (layer i, bits index c)."""
+        return (
+            self.edge_times()[i]
+            + float(size_table[i, c_idx]) / bandwidth
+            + self.cloud_times()[i]
+        )

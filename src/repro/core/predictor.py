@@ -1,0 +1,123 @@
+"""Accuracy- and size-predictor tables A_i(c), S_i(c) (paper Sec. III-C).
+
+Built once offline from calibration data ("trained on ILSVRC2012" in the
+paper; here: any batch iterator). The paper's Fig. 5 observation — the
+per-(i, c) accuracy drop and compressed size are stable across epochs — is
+what makes a static lookup table sound; ``test_predictor_stability``
+re-validates it on our testbed.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core.quantization import quantize_dequantize
+from repro.models.api import Model
+
+
+@dataclass
+class PredictorTables:
+    """A[i, c] = accuracy drop; S[i, c] = mean compressed bytes per sample."""
+
+    points: List[str]
+    bits_choices: List[int]
+    acc_drop: np.ndarray          # (N, C)
+    size_bytes: np.ndarray        # (N, C)
+    base_accuracy: float
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        np.savez(
+            path,
+            acc_drop=self.acc_drop,
+            size_bytes=self.size_bytes,
+            base_accuracy=self.base_accuracy,
+            points=np.array(self.points),
+            bits_choices=np.array(self.bits_choices),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "PredictorTables":
+        z = np.load(path, allow_pickle=False)
+        return cls(
+            points=[str(p) for p in z["points"]],
+            bits_choices=[int(b) for b in z["bits_choices"]],
+            acc_drop=z["acc_drop"],
+            size_bytes=z["size_bytes"],
+            base_accuracy=float(z["base_accuracy"]),
+        )
+
+
+def _top1(logits: np.ndarray) -> np.ndarray:
+    if logits.ndim == 3:          # LM: use final position
+        logits = logits[:, -1]
+    return logits.argmax(-1)
+
+
+def build_tables(
+    model: Model,
+    params,
+    batches: Sequence[Dict],
+    bits_choices: Sequence[int],
+    *,
+    points: Optional[Sequence[int]] = None,
+    labels_key: str = "labels",
+) -> PredictorTables:
+    """Run calibration: for each decoupling point i and bit width c,
+    quantize the boundary features and measure (a) accuracy drop vs the
+    un-quantized model, (b) exact post-Huffman compressed size."""
+    names = model.decoupling_points()
+    pts = list(points) if points is not None else list(range(len(names)))
+    nC = len(bits_choices)
+
+    head = jax.jit(model.run_head, static_argnums=2)
+    tail = jax.jit(model.run_tail, static_argnums=2)
+    full = jax.jit(model.forward)
+
+    correct_base = 0
+    total = 0
+    correct = np.zeros((len(pts), nC))
+    sizes = np.zeros((len(pts), nC))
+    n_batches = 0
+
+    for batch in batches:
+        n_batches += 1
+        labels = np.asarray(batch[labels_key]) if labels_key in batch else None
+        base_logits = np.asarray(full(params, batch))
+        base_pred = _top1(base_logits)
+        ref = labels if labels is not None else base_pred
+        correct_base += int((base_pred == ref).sum())
+        bsz = ref.shape[0]
+        total += bsz
+
+        for pi, point in enumerate(pts):
+            out = head(params, batch, point)
+            boundary, extras = out if isinstance(out, tuple) else (out, None)
+            for ci, bits in enumerate(bits_choices):
+                xq = quantize_dequantize(boundary, bits)
+                logits = np.asarray(
+                    tail(params, xq, point, extras)
+                    if extras is not None
+                    else tail(params, xq, point)
+                )
+                pred = _top1(logits)
+                correct[pi, ci] += int((pred == ref).sum())
+                sizes[pi, ci] += comp.transfer_size_bytes(boundary, bits) / bsz
+
+    base_acc = correct_base / max(total, 1)
+    acc = correct / max(total, 1)
+    tables = PredictorTables(
+        points=[names[p] for p in pts],
+        bits_choices=list(bits_choices),
+        acc_drop=np.maximum(base_acc - acc, 0.0),
+        size_bytes=sizes / max(n_batches, 1),
+        base_accuracy=base_acc,
+    )
+    return tables

@@ -1,0 +1,119 @@
+"""JALAD's in-layer feature quantization (paper Sec. III-B).
+
+The paper's step conversion:
+
+    y_i = (2^c - 1) * (x_i - min(x)) / (max(x) - min(x))   if max(x) >= 2^c
+          x_i                                              otherwise
+
+i.e. map the float feature map affinely into [0, 2^c) and round. We
+implement the faithful per-tensor version plus a beyond-paper per-channel
+variant (tighter ranges -> lower error at the same bit width).
+
+All functions are jit-able; the Pallas kernel in
+``repro.kernels.quantize`` implements the same math as a fused
+TPU kernel (see its ``ref.py`` which delegates here).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    """Quantized feature map + the affine range needed to invert."""
+
+    values: jnp.ndarray     # integer codes, same shape as input (int32)
+    x_min: jnp.ndarray      # per-tensor scalar or per-channel vector
+    x_max: jnp.ndarray
+    bits: int
+
+
+def quantize(x: jnp.ndarray, bits: int, axis: Optional[int] = None) -> Quantized:
+    """Min-max step quantization. ``axis`` selects per-channel statistics
+    (beyond-paper); ``axis=None`` is the paper's per-tensor version."""
+    xf = x.astype(jnp.float32)
+    if axis is None:
+        x_min = jnp.min(xf)
+        x_max = jnp.max(xf)
+        mn, mx = x_min, x_max
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        x_min = jnp.min(xf, axis=reduce_axes)
+        x_max = jnp.max(xf, axis=reduce_axes)
+        shape = [1] * x.ndim
+        shape[axis] = x.shape[axis]
+        mn = x_min.reshape(shape)
+        mx = x_max.reshape(shape)
+    levels = (1 << bits) - 1
+    scale = jnp.where(mx > mn, levels / (mx - mn), 0.0)
+    q = jnp.clip(jnp.round((xf - mn) * scale), 0, levels).astype(jnp.int32)
+    return Quantized(q, x_min, x_max, bits)
+
+
+def dequantize(q: Quantized, dtype=jnp.float32, axis: Optional[int] = None
+               ) -> jnp.ndarray:
+    levels = (1 << q.bits) - 1
+    if q.x_min.ndim == 0:
+        mn, mx = q.x_min, q.x_max
+    else:
+        ax = axis if axis is not None else 0
+        shape = [1] * q.values.ndim
+        shape[ax] = q.values.shape[ax]
+        mn = q.x_min.reshape(shape)
+        mx = q.x_max.reshape(shape)
+    step = jnp.where(levels > 0, (mx - mn) / levels, 0.0)
+    return (q.values.astype(jnp.float32) * step + mn).astype(dtype)
+
+
+def quantize_dequantize(x: jnp.ndarray, bits: int,
+                        axis: Optional[int] = None) -> jnp.ndarray:
+    """Straight-through simulation of the edge->cloud quantization (the
+    jit-able path used inside decoupled inference and calibration)."""
+    q = quantize(x, bits, axis)
+    return dequantize(q, x.dtype, axis)
+
+
+def quantization_mse(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    xq = quantize_dequantize(x, bits)
+    return jnp.mean(jnp.square(x.astype(jnp.float32) - xq.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Bit packing: c-bit codes -> dense uint32 words (what actually crosses the
+# wire before host-side Huffman; also the on-device layout of the Pallas
+# kernel output).
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack int codes (flat, values < 2^bits) into uint32 words. The input
+    length must be a multiple of ``32 // gcd`` packing granularity; we pad.
+    """
+    if not (1 <= bits <= 16):
+        raise ValueError(f"bits must be in [1,16], got {bits}")
+    flat = codes.reshape(-1).astype(jnp.uint32)
+    per_word = 32 // bits if 32 % bits == 0 else 32 // bits
+    n = flat.shape[0]
+    pad = (-n) % per_word
+    flat = jnp.pad(flat, (0, pad))
+    grouped = flat.reshape(-1, per_word)
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    return jnp.bitwise_or.reduce(grouped << shifts[None, :], axis=1)
+
+
+def unpack_bits(words: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    per_word = 32 // bits
+    shifts = (jnp.arange(per_word, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    mask = jnp.uint32((1 << bits) - 1)
+    codes = (words[:, None] >> shifts[None, :]) & mask
+    return codes.reshape(-1)[:n].astype(jnp.int32)
+
+
+def packed_size_bytes(num_values: int, bits: int) -> int:
+    """Size of the bit-packed representation (pre-Huffman), plus the 8-byte
+    (min,max) range header."""
+    per_word = 32 // bits
+    words = (num_values + per_word - 1) // per_word
+    return words * 4 + 8

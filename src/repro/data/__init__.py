@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    TokenStream,
+    ImageStream,
+    ShardedLoader,
+    make_batch,
+)
+
+__all__ = ["TokenStream", "ImageStream", "ShardedLoader", "make_batch"]

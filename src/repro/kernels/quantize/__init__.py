@@ -1,0 +1,7 @@
+from repro.kernels.quantize.ops import (
+    quantize_pack,
+    dequantize_unpack,
+    quantize_dequantize_kernel,
+)
+
+__all__ = ["quantize_pack", "dequantize_unpack", "quantize_dequantize_kernel"]

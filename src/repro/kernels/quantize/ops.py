@@ -1,0 +1,98 @@
+"""Jitted public wrappers around the Pallas quantization kernels.
+
+Handles arbitrary input shapes/dtypes: flattens to 2-D, pads to
+(block_m, 128) tiles, launches the kernels, and unpads. ``interpret``
+defaults to True off-TPU (this container) and False on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.quantize import quantize as k
+
+LANES = k.LANES
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_tiles(x: jnp.ndarray, block_m: int) -> Tuple[jnp.ndarray, int]:
+    """Flatten to (M, 128) and pad M to a block multiple. Returns the padded
+    2-D array and the original element count."""
+    n_elem = x.size
+    flat = x.reshape(-1)
+    cols = LANES
+    rows = (n_elem + cols - 1) // cols
+    rows_pad = (rows + block_m - 1) // block_m * block_m
+    pad = rows_pad * cols - n_elem
+    # Pad with the first element so padding never changes min/max.
+    fill = flat[0]
+    flat = jnp.concatenate([flat, jnp.full((pad,), fill, flat.dtype)])
+    return flat.reshape(rows_pad, cols), n_elem
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_m", "interpret"))
+def quantize_pack(
+    x: jnp.ndarray,
+    bits: int,
+    block_m: int = k.DEFAULT_BLOCK_M,
+    interpret: bool | None = None,
+):
+    """Fused min/max + affine quantization (+ nibble packing for bits<=4).
+
+    Returns (codes, mn, mx). codes is uint8 of x.size elements for bits>4,
+    or packed uint8 (two codes/byte) for bits<=4.
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    x2d, n_elem = _to_tiles(x, block_m)
+    bm = min(block_m, x2d.shape[0])
+    mn, mx = k.minmax_blocks(x2d, bm, interpret=interpret)
+    codes2d = k.quantize_blocks(x2d, mn, mx, bits, bm, interpret=interpret)
+    if bits <= 4:
+        packed = k.pack4_blocks(codes2d, bm, interpret=interpret)
+        return packed, mn, mx
+    return codes2d, mn, mx
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "shape", "block_m", "interpret", "out_dtype"),
+)
+def dequantize_unpack(
+    codes2d: jnp.ndarray,
+    mn,
+    mx,
+    bits: int,
+    shape: Tuple[int, ...],
+    block_m: int = k.DEFAULT_BLOCK_M,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+):
+    """Inverse of quantize_pack; ``shape`` is the original tensor shape."""
+    if interpret is None:
+        interpret = _should_interpret()
+    if bits <= 4:
+        u = codes2d
+        lo = (u & 0x0F).astype(jnp.uint8)
+        hi = (u >> 4).astype(jnp.uint8)
+        codes2d = jnp.stack([lo, hi], axis=-1).reshape(u.shape[0], -1)
+    bm = min(block_m, codes2d.shape[0])
+    x2d = k.dequantize_blocks(codes2d, mn, mx, bits, bm, out_dtype,
+                              interpret=interpret)
+    n_elem = int(np.prod(shape))
+    return x2d.reshape(-1)[:n_elem].reshape(shape)
+
+
+def quantize_dequantize_kernel(x: jnp.ndarray, bits: int,
+                               interpret: bool | None = None) -> jnp.ndarray:
+    """One-call straight-through path (edge-side simulation)."""
+    codes, mn, mx = quantize_pack(x, bits, interpret=interpret)
+    return dequantize_unpack(codes, mn, mx, bits, tuple(x.shape),
+                             interpret=interpret, out_dtype=x.dtype)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the quantize/dequantize/pack kernels.
+
+Delegates to ``repro.core.quantization`` — the kernels must match this
+bit-for-bit (codes) / exactly (dequantized floats) on every shape/dtype
+swept by the tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+
+
+def quantize_ref(x: jnp.ndarray, bits: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (codes uint8, min, max) — per-tensor min/max quantization."""
+    quantized = q.quantize(x, bits)
+    return (
+        quantized.values.astype(jnp.uint8),
+        quantized.x_min,
+        quantized.x_max,
+    )
+
+
+def dequantize_ref(codes: jnp.ndarray, mn, mx, bits: int,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    levels = (1 << bits) - 1
+    step = jnp.where(levels > 0, (mx - mn) / levels, 0.0)
+    return (codes.astype(jnp.float32) * step + mn).astype(dtype)
+
+
+def pack4_ref(codes: jnp.ndarray) -> jnp.ndarray:
+    """Two int4 codes per uint8 along the trailing axis."""
+    u = codes.astype(jnp.uint8)
+    return u[..., 0::2] | (u[..., 1::2] << 4)
+
+
+def quantize_dequantize_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    return q.quantize_dequantize(x, bits)

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state. The dry-run entry
+point (``repro.launch.dryrun``) sets ``XLA_FLAGS`` to fake 512 host
+devices *before* importing jax; everything else sees the real device
+count.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The target TPU v5e topology: one 16x16 pod (256 chips) or two pods
+    (512 chips) with an explicit leading "pod" axis for the inter-pod
+    (DCN-class) boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "run under repro.launch.dryrun (sets "
+            "--xla_force_host_platform_device_count=512)"
+        )
+    dev = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_host_mesh(model_axis: Optional[int] = None) -> Mesh:
+    """A mesh over whatever devices actually exist (CPU smoke tests)."""
+    devices = jax.devices()
+    n = len(devices)
+    m = model_axis or 1
+    dev = np.asarray(devices).reshape(n // m, m)
+    return Mesh(dev, ("data", "model"))

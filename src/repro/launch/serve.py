@@ -1,0 +1,87 @@
+"""Serving launcher: batched generation with the JALAD edge-cloud runtime.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
+      --tokens 16                       # plain cloud-style serving
+  PYTHONPATH=src python -m repro.launch.serve --arch resnet50 --jalad \
+      --bandwidth 300e3                 # JALAD decoupled edge-cloud serving
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.config import JaladConfig, ServeConfig, get_config
+from repro.data.synthetic import make_batch
+from repro.models.api import build_model
+from repro.serving.engine import ServeSession
+from repro.utils.log import get_logger
+
+log = get_logger("repro.launch.serve")
+
+
+def serve_lm(args) -> int:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    sc = ServeConfig(max_batch=args.batch, max_seq_len=args.prompt + args.tokens)
+    session = ServeSession(model, params, sc)
+    batch = make_batch(cfg, args.batch, args.prompt, seed=args.seed)
+    batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+    out = session.generate(batch, args.tokens, temperature=args.temperature,
+                           seed=args.seed)
+    log.info("generated %s tokens for %d requests", out.shape, args.batch)
+    print(out[:, :16])
+    return 0
+
+
+def serve_jalad(args) -> int:
+    """Edge-cloud decoupled serving of the CNN testbed (the paper's mode)."""
+    from repro.serving.edge_cloud import build_edge_cloud_server
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    jc = JaladConfig(bandwidth_bytes_per_s=args.bandwidth,
+                     accuracy_drop_budget=args.acc_drop)
+    server, params = build_edge_cloud_server(cfg, jc, seed=args.seed,
+                                             calib_batches=args.calib,
+                                             calib_batch_size=args.batch)
+    batch = make_batch(cfg, args.batch, 64, seed=args.seed + 1)
+    for i in range(args.requests):
+        result, lat = server.serve_batch(batch, bandwidth=args.bandwidth)
+        log.info(
+            "req %d: point=%d bits=%d edge=%.1fms xfer=%.1fms cloud=%.1fms "
+            "sent=%dB", i, lat.plan_point, lat.plan_bits, lat.edge_s * 1e3,
+            lat.transfer_s * 1e3, lat.cloud_s * 1e3, lat.bytes_sent,
+        )
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--jalad", action="store_true",
+                    help="JALAD edge-cloud decoupled mode (CNN testbed)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--bandwidth", type=float, default=1e6)
+    ap.add_argument("--acc-drop", type=float, default=0.10)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--calib", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.jalad:
+        return serve_jalad(args)
+    return serve_lm(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

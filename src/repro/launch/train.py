@@ -1,0 +1,70 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 50 \
+      --reduced            # CPU-sized smoke of the same family
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --dry-run
+      # lower+compile only, on the production mesh (see repro.launch.dryrun)
+
+Real execution runs on whatever devices exist (CPU here); the production
+mesh is exercised via the dry-run path.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.config import TrainConfig, get_config
+from repro.data.synthetic import ShardedLoader
+from repro.models.api import build_model
+from repro.training.loop import train
+from repro.utils.log import get_logger
+
+log = get_logger("repro.launch.train")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "full", "dots", "blocks"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) variant of the family")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    log.info("arch=%s params=%.2fM devices=%d", cfg.arch_id,
+             model.param_count() / 1e6, jax.device_count())
+
+    tc = TrainConfig(
+        learning_rate=args.lr,
+        total_steps=args.steps,
+        warmup_steps=max(args.steps // 10, 1),
+        microbatches=args.microbatches,
+        remat=args.remat,
+        seed=args.seed,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+    )
+    loader = ShardedLoader(cfg, global_batch=args.batch, seq_len=args.seq,
+                           seed=args.seed)
+    result = train(model, tc, loader, num_steps=args.steps)
+    log.info("done: first loss %.4f -> last loss %.4f (%.2f steps/s)",
+             result.losses[0], result.losses[-1], result.steps_per_sec)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,99 @@
+"""Parameter specification & materialization.
+
+Every model defines its parameters once, as a pytree of :class:`ParamSpec`
+(shape + dtype + logical axis names + initializer). From that single source
+of truth we derive
+  * materialized parameters (``materialize``),
+  * ``jax.ShapeDtypeStruct`` stand-ins for dry-runs (``abstractify``),
+  * sharding specs (``repro.sharding.rules`` maps logical axes -> mesh axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # one logical axis name (or None) per dim
+    dtype: str = "bfloat16"
+    init: str = "normal"                 # normal | zeros | ones | embed | conv
+    scale: float = 1.0                   # stddev multiplier for "normal"
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(
+                f"shape {self.shape} and logical {self.logical} rank mismatch"
+            )
+
+
+def spec(shape, logical, dtype="bfloat16", init="normal", scale=1.0) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(logical), dtype, init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(s: ParamSpec) -> int:
+    # Last-but-one dim is the canonical fan-in for 2D+ weights; embeddings use
+    # d_model; 1D gets 1.
+    if len(s.shape) >= 2:
+        return int(np.prod(s.shape[:-1]))
+    return 1
+
+
+def materialize_leaf(key, s: ParamSpec):
+    dtype = jnp.dtype(s.dtype)
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dtype)
+    if s.init == "embed":
+        std = 1.0 * s.scale
+        return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(dtype)
+    # "normal" / "conv": truncated-normal fan-in scaled.
+    fan_in = _fan_in(s)
+    std = s.scale / np.sqrt(max(fan_in, 1))
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, s.shape, jnp.float32) * std
+    ).astype(dtype)
+
+
+def materialize(specs, rng):
+    """Sample concrete parameters for a ParamSpec tree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [materialize_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstractify(specs):
+    """ShapeDtypeStruct tree for ``jit(...).lower()`` — no allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+def logical_axes(specs):
+    """Tree of logical-axis tuples, same structure as the params."""
+    return jax.tree.map(lambda s: s.logical, specs, is_leaf=is_spec)
+
+
+def stack_specs(s: ParamSpec, n: int, axis_name: str = "layers") -> ParamSpec:
+    """Prepend a scan dimension of size n (used to stack per-layer params)."""
+    return dataclasses.replace(
+        s, shape=(n,) + s.shape, logical=(axis_name,) + s.logical
+    )
+
+
+def stack_tree(specs, n: int, axis_name: str = "layers"):
+    return jax.tree.map(lambda s: stack_specs(s, n, axis_name), specs, is_leaf=is_spec)

@@ -1,0 +1,423 @@
+"""Attention: GQA/MQA/MHA with RoPE / M-RoPE, optional qk-norm, optional
+sliding window, memory-safe chunked (online-softmax) prefill, cross
+attention for encoder-decoder models, and single-token decode against a KV
+cache (ring-buffer for sliding-window mode).
+
+Shapes follow (batch, seq, heads, head_dim) throughout.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ModelConfig
+from repro.models.init import spec
+from repro.models.layers import rope as rope_lib
+from repro.sharding.activation import constrain
+
+_NEG_INF = -1e30
+_QHEADS = ("batch", "seq", "heads", "head_dim")
+_KVHEADS = ("batch", "seq", "kv_heads", "head_dim")
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(cfg: ModelConfig, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    p = {
+        "wq": spec((d, h, hd), ("embed", "heads", "head_dim"), cfg.param_dtype),
+        "wk": spec((d, kv, hd), ("embed", "kv_heads", "head_dim"), cfg.param_dtype),
+        "wv": spec((d, kv, hd), ("embed", "kv_heads", "head_dim"), cfg.param_dtype),
+        "wo": spec((h, hd, d), ("heads", "head_dim", "embed"), cfg.param_dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = spec((hd,), ("head_dim",), cfg.param_dtype, init="ones")
+        p["k_norm"] = spec((hd,), ("head_dim",), cfg.param_dtype, init="ones")
+    return p
+
+
+def _maybe_qk_norm(params, q, k, cfg: ModelConfig, eps: float = 1e-6):
+    if "q_norm" not in params:
+        return q, k
+
+    def _rms(x, scale):
+        xf = x.astype(jnp.float32)
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        return ((xf * (ms + eps) ** -0.5) * scale.astype(jnp.float32)).astype(x.dtype)
+
+    return _rms(q, params["q_norm"]), _rms(k, params["k_norm"])
+
+
+def project_qkv(
+    params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    rope: bool = True,
+    positions_3d: Optional[jnp.ndarray] = None,
+):
+    """Project to (q, k, v); applies qk-norm then RoPE/M-RoPE to q and k."""
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wq"]), _QHEADS)
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wk"]), _KVHEADS)
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wv"]), _KVHEADS)
+    q, k = _maybe_qk_norm(params, q, k, cfg)
+    if rope and cfg.rope_kind != "none":
+        if cfg.rope_kind == "mrope":
+            p3 = (
+                positions_3d
+                if positions_3d is not None
+                else rope_lib.text_positions_3d(positions)
+            )
+            q = rope_lib.apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+            k = rope_lib.apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
+            k = rope_lib.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Dense (small-sequence) attention
+# ---------------------------------------------------------------------------
+
+
+def _split_gqa(q, kv_heads):
+    """(B,S,H,K) -> (B,S,kv,group,K)."""
+    b, s, h, k = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, k)
+
+
+def full_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Materialized-scores attention; fine for seq <= ~8k."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = _split_gqa(q, kvh)                                  # (B,Sq,kv,g,K)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg, k).astype(jnp.float32)
+    scores *= hd ** -0.5
+    sk = k.shape[1]
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (online-softmax) attention for long prefill
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flash attention: two-level scan (outer query chunks, inner online
+    softmax over key/value chunks) with a custom VJP whose backward
+    RECOMPUTES the score blocks instead of saving them. Peak memory is
+    O(q_chunk * kv_chunk) per (batch, head) in both directions — without
+    the custom VJP the scan saves every (qc, kc) probability block for the
+    backward pass, i.e. the full S^2 scores (observed ~50 GiB/device at
+    train_4k)."""
+    b, s, h, hd = q.shape
+    sk = k.shape[1]
+    if causal and s != sk:
+        raise ValueError("causal chunked attention requires sq == sk")
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, sk)
+    if s % q_chunk or sk % kv_chunk:
+        raise ValueError(
+            f"seq q={s}/k={sk} not divisible by chunks {q_chunk}/{kv_chunk}"
+        )
+    return _flash(q, k, v, causal, window, q_chunk, kv_chunk)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk):
+    b, s, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nq, nk = s // q_chunk, sk // kv_chunk
+    qg = _split_gqa(q, kvh).reshape(b, nq, q_chunk, kvh, g, hd)
+    kc = k.reshape(b, nk, kv_chunk, kvh, hd).swapaxes(0, 1)   # (nk, B, ...)
+    vc = v.reshape(b, nk, kv_chunk, kvh, hd).swapaxes(0, 1)
+    scale = hd ** -0.5
+
+    def q_step(_, qi):
+        qblk, qidx = qi                                     # (B,qc,kv,g,K), ()
+        qpos = qidx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kblk, vblk, kidx = ki
+            kpos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            s_blk = (
+                jnp.einsum("bqhgk,bshk->bhgqs", qblk, kblk).astype(jnp.float32)
+                * scale
+            )
+            s_blk = _chunk_mask(s_blk, qpos, kpos, causal, window)
+            m_new = jnp.maximum(m, s_blk.max(axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqs,bshk->bhgqk", p.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kvh, g, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((b, kvh, g, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (kc, vc, jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))            # (B,kv,g,qc)
+        return None, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(
+        q_step, None, (qg.swapaxes(0, 1), jnp.arange(nq))
+    )
+    # outs: (nq, B, kv, g, qc, K) -> (B, S, H, K); lses: (nq, B, kv, g, qc)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, hd)
+    return out, lses
+
+
+def _chunk_mask(s_blk, qpos, kpos, causal, window):
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return jnp.where(mask[None, None, None], s_blk, _NEG_INF)
+
+
+def _flash_fn(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk):
+    out, lses = _flash_fwd_impl(q, k, v, causal, window, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lses)
+
+
+def _flash_bwd(causal, window, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lses = res
+    b, s, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nq, nk = s // q_chunk, sk // kv_chunk
+    scale = hd ** -0.5
+
+    qg = _split_gqa(q, kvh).reshape(b, nq, q_chunk, kvh, g, hd).swapaxes(0, 1)
+    og = _split_gqa(out, kvh).reshape(b, nq, q_chunk, kvh, g, hd).swapaxes(0, 1)
+    dg = _split_gqa(dout, kvh).reshape(
+        b, nq, q_chunk, kvh, g, hd
+    ).swapaxes(0, 1)
+    kc = k.reshape(b, nk, kv_chunk, kvh, hd).swapaxes(0, 1)
+    vc = v.reshape(b, nk, kv_chunk, kvh, hd).swapaxes(0, 1)
+    # delta_i = sum(dout * out) over head_dim: (nq, B, kv, g, qc)
+    delta = jnp.sum(
+        dg.astype(jnp.float32) * og.astype(jnp.float32), axis=-1
+    ).transpose(0, 1, 3, 4, 2)
+
+    def q_step(carry, xs):
+        dk_acc, dv_acc = carry                              # (nk,B,kc,kv,K) f32
+        qblk, doblk, lse_i, delta_i, qidx = xs
+        qpos = qidx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(dq_acc, ki):
+            kblk, vblk, kidx = ki
+            kpos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            s_blk = (
+                jnp.einsum("bqhgk,bshk->bhgqs", qblk, kblk).astype(jnp.float32)
+                * scale
+            )
+            s_blk = _chunk_mask(s_blk, qpos, kpos, causal, window)
+            p = jnp.exp(s_blk - lse_i[..., None])           # (B,kv,g,qc,kc)
+            dp = jnp.einsum(
+                "bqhgk,bshk->bhgqs", doblk, vblk
+            ).astype(jnp.float32)
+            ds = p * (dp - delta_i[..., None]) * scale
+            dq_blk = jnp.einsum("bhgqs,bshk->bqhgk", ds.astype(kblk.dtype),
+                                kblk).astype(jnp.float32)
+            dk_blk = jnp.einsum("bhgqs,bqhgk->bshk", ds.astype(qblk.dtype),
+                                qblk).astype(jnp.float32)
+            dv_blk = jnp.einsum("bhgqs,bqhgk->bshk", p.astype(doblk.dtype),
+                                doblk).astype(jnp.float32)
+            return dq_acc + dq_blk, (dk_blk, dv_blk)
+
+        dq0 = jnp.zeros((b, q_chunk, kvh, g, hd), jnp.float32)
+        dq_i, (dk_contrib, dv_contrib) = jax.lax.scan(
+            kv_step, dq0, (kc, vc, jnp.arange(nk))
+        )
+        return (dk_acc + dk_contrib, dv_acc + dv_contrib), dq_i
+
+    dk0 = jnp.zeros((nk, b, kv_chunk, kvh, hd), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+    (dk_f, dv_f), dq_stack = jax.lax.scan(
+        q_step, (dk0, dv0), (qg, dg, lses, delta, jnp.arange(nq))
+    )
+    dq = dq_stack.swapaxes(0, 1).reshape(b, s, kvh, g, hd).reshape(
+        b, s, h, hd
+    ).astype(q.dtype)
+    dk = dk_f.swapaxes(0, 1).reshape(b, sk, kvh, hd).astype(k.dtype)
+    dv = dv_f.swapaxes(0, 1).reshape(b, sk, kvh, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash = jax.custom_vjp(_flash_fn, nondiff_argnums=(3, 4, 5, 6))
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def prefill_attention(
+    q, k, v, *, causal: bool = True, window: int = 0, dense_threshold: int = 2048
+):
+    """Dispatch dense vs chunked based on sequence length.
+
+    Dense materializes (B,H,Sq,Sk) scores — only acceptable for short
+    sequences; production shapes (train_4k, prefill_32k) take the
+    flash-style chunked path whose transient is O(q_chunk * kv_chunk)."""
+    if q.shape[1] <= dense_threshold or (causal and q.shape[1] != k.shape[1]):
+        return full_attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# JALAD-quantized (int8) KV cache
+# ---------------------------------------------------------------------------
+#
+# The paper's min-max step quantization applied to the serving runtime's
+# per-step boundary data: K/V rows are stored as int8 codes with one
+# float32 amax-scale per (batch, position, kv_head). Rows are symmetric
+# around zero (post-RoPE keys, values), so we use the symmetric variant
+# q = round(127 * x / amax); the dequantize multiply fuses into the
+# attention matmuls under XLA, so HBM cache traffic drops ~2x.
+
+
+def quantize_kv_row(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., hd) -> (int8 codes, f32 scale over the trailing dim)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode against a KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stack KV cache. ``k``/``v``: (L, B, S_cache, kv_heads, hd).
+    In sliding-window mode S_cache == window and writes wrap (ring buffer);
+    keys are stored post-RoPE so slot order is irrelevant to attention."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+    @property
+    def cache_len(self) -> int:
+        return self.k.shape[2]
+
+
+def init_kv_cache(
+    num_layers: int,
+    batch: int,
+    cache_len: int,
+    kv_heads: int,
+    head_dim: int,
+    dtype,
+) -> KVCache:
+    shape = (num_layers, batch, cache_len, kv_heads, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_update(k_cache, v_cache, k_new, v_new, pos):
+    """Write one step at ``pos`` (mod cache length -> ring buffer).
+
+    k_cache/v_cache: (B, S_c, kv, hd); k_new/v_new: (B, 1, kv, hd); pos: ()"""
+    s_c = k_cache.shape[1]
+    slot = jnp.mod(pos, s_c)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype),
+                                           (0, slot, 0, 0))
+    return k_cache, v_cache
+
+
+def scale_update(s_cache: jnp.ndarray, s_new: jnp.ndarray, pos):
+    """Write one step's (B, 1, kv) scale row at pos (ring)."""
+    slot = jnp.mod(pos, s_cache.shape[1])
+    return jax.lax.dynamic_update_slice(
+        s_cache, s_new.astype(s_cache.dtype), (0, slot, 0)
+    )
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S_c, kv, hd)
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray,   # () int32 — number of valid positions INCLUDING new
+) -> jnp.ndarray:
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    s_c = k_cache.shape[1]
+    qg = _split_gqa(q, kvh)[:, 0]                            # (B,kv,g,K)
+    scores = jnp.einsum("bhgk,bshk->bhgs", qg, k_cache).astype(jnp.float32)
+    scores *= hd ** -0.5
+    valid = jnp.arange(s_c)[None] < jnp.minimum(length, s_c)
+    scores = jnp.where(valid[:, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgs,bshk->bhgk", probs, v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def attn_output(params, out: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (encoder-decoder): K/V from encoder output, no RoPE.
+# ---------------------------------------------------------------------------
+
+
+def cross_attention_kv(params, enc_out: jnp.ndarray):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    return k, v
+
+
+def cross_attention(params, x: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    out = prefill_attention(q, k, v, causal=False)
+    return attn_output(params, out)

@@ -1,0 +1,247 @@
+"""Mamba2 (SSD) layer [arXiv:2405.21060], used by zamba2 [arXiv:2411.15242].
+
+Training/prefill uses the chunk-wise SSD algorithm: intra-chunk quadratic
+attention-like term + inter-chunk recurrent state carried by a scan. Decode
+is the plain recurrence ``S <- S*exp(dt*A) + dt*B x^T; y = C.S + D*x``.
+
+State layout: ``S``: (batch, heads, state, head_dim); conv state keeps the
+last (width-1) raw conv inputs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ModelConfig
+from repro.models.init import spec
+
+MAMBA_HEAD_DIM = 64
+
+
+class MambaDims(NamedTuple):
+    d_inner: int
+    heads: int
+    head_dim: int
+    state: int
+    conv_width: int
+    conv_channels: int
+
+
+def mamba_dims(cfg: ModelConfig) -> MambaDims:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    head_dim = MAMBA_HEAD_DIM
+    heads = d_inner // head_dim
+    state = cfg.ssm_state_dim
+    return MambaDims(
+        d_inner, heads, head_dim, state, cfg.ssm_conv_width, d_inner + 2 * state
+    )
+
+
+def mamba2_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    dims = mamba_dims(cfg)
+    di, h, n, w = dims.d_inner, dims.heads, dims.state, dims.conv_width
+    dt_ = cfg.param_dtype
+    return {
+        # in_proj -> [z(di), x(di), B(n), C(n), dt(h)]
+        "in_proj": spec((d, 2 * di + 2 * n + h), ("embed", "ssm_in"), dt_),
+        "conv_w": spec((w, dims.conv_channels), (None, "ssm_in"), dt_, scale=0.5),
+        "conv_b": spec((dims.conv_channels,), ("ssm_in",), dt_, init="zeros"),
+        "A_log": spec((h,), ("heads",), "float32", init="zeros"),
+        "D": spec((h,), ("heads",), "float32", init="ones"),
+        "dt_bias": spec((h,), ("heads",), "float32", init="zeros"),
+        "norm_scale": spec((di,), ("ffn",), dt_, init="ones"),
+        "out_proj": spec((di, d), ("ffn", "embed"), dt_),
+    }
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., q) -> (..., q, q) with [i, j] = sum_{j < k <= i} a_k (i>=j),
+    -inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,        # (b, l, h, p) float32
+    dt: jnp.ndarray,       # (b, l, h)   float32, post-softplus
+    A: jnp.ndarray,        # (h,)        float32, negative
+    B: jnp.ndarray,        # (b, l, n)
+    C: jnp.ndarray,        # (b, l, n)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (b, h, n, p)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    if l % chunk:
+        raise ValueError(f"seq {l} not divisible by chunk {chunk}")
+    nc = l // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    a = dtc * A                                    # (b,nc,q,h)
+    a_cs = jnp.cumsum(a, axis=2)
+
+    # Intra-chunk (quadratic) term.
+    L = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))  # (b,nc,h,q,s)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)
+    y_diag = jnp.einsum("bcqs,bchqs,bcsh,bcshp->bcqhp", scores, L, dtc, xc)
+
+    # Per-chunk end states.
+    decay_to_end = jnp.exp(a_cs[:, :, -1:, :] - a_cs)         # (b,nc,q,h)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchnp", Bc, decay_to_end * dtc, xc)
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])                  # (b,nc,h)
+
+    def step(S, inp):
+        cd, st = inp
+        return S * cd[..., None, None] + st, S                # emit pre-state
+
+    S0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+    S_last, prev = jax.lax.scan(
+        step, S0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1))
+    )
+    prev = prev.swapaxes(0, 1)                                # (b,nc,h,n,p)
+
+    y_off = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc, prev, jnp.exp(a_cs))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, S_last
+
+
+def ssd_sequential(x, dt, A, B, C, init_state=None):
+    """Step-by-step reference recurrence (oracle for tests & decode)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    S0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+
+    def step(S, t):
+        xt, dtt, Bt, Ct = t
+        decay = jnp.exp(dtt * A)                              # (b,h)
+        dBx = jnp.einsum("bn,bh,bhp->bhnp", Bt, dtt, xt)
+        S_new = S * decay[..., None, None] + dBx
+        y = jnp.einsum("bn,bhnp->bhp", Ct, S_new)
+        return S_new, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1), B.swapaxes(0, 1), C.swapaxes(0, 1))
+    S_last, ys = jax.lax.scan(step, S0, xs)
+    return ys.swapaxes(0, 1), S_last
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray   # (B, heads, state, head_dim) float32
+    conv: jnp.ndarray  # (B, width-1, conv_channels)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    dims = mamba_dims(cfg)
+    return MambaState(
+        jnp.zeros((batch, dims.heads, dims.state, dims.head_dim), jnp.float32),
+        jnp.zeros((batch, dims.conv_width - 1, dims.conv_channels), dtype),
+    )
+
+
+def _causal_depthwise_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """xbc: (B, L, C); w: (W, C) depthwise kernel; causal."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        out = out + pad[:, i : i + xbc.shape[1]] * w[i]
+    return out + b
+
+
+def _split_in_proj(proj, dims: MambaDims):
+    di, n, h = dims.d_inner, dims.state, dims.heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + dims.conv_channels]
+    dt_raw = proj[..., di + dims.conv_channels :]
+    return z, xbc, dt_raw
+
+
+def apply_mamba2(
+    params, x: jnp.ndarray, cfg: ModelConfig, chunk: int = 256
+) -> jnp.ndarray:
+    """Full-sequence (train / prefill) forward. x: (B, L, d_model)."""
+    dims = mamba_dims(cfg)
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc, dt_raw = _split_in_proj(proj, dims)
+    xbc = jax.nn.silu(
+        _causal_depthwise_conv(xbc, params["conv_w"], params["conv_b"]).astype(
+            jnp.float32
+        )
+    )
+    xin = xbc[..., : dims.d_inner]
+    Bm = xbc[..., dims.d_inner : dims.d_inner + dims.state]
+    Cm = xbc[..., dims.d_inner + dims.state :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xin.reshape(*xin.shape[:2], dims.heads, dims.head_dim)
+
+    if x.shape[1] % chunk == 0 and x.shape[1] > chunk:
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    else:
+        y, _ = ssd_sequential(xh, dt, A, Bm, Cm)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(*x.shape[:2], dims.d_inner)
+
+    # Gated RMSNorm (mamba2's norm-before-out_proj).
+    g = jax.nn.silu(z.astype(jnp.float32))
+    yn = y * g
+    ms = jnp.mean(jnp.square(yn), axis=-1, keepdims=True)
+    yn = yn * (ms + 1e-5) ** -0.5 * params["norm_scale"].astype(jnp.float32)
+    return jnp.einsum("ble,ed->bld", yn.astype(x.dtype), params["out_proj"])
+
+
+def decode_mamba2(
+    params, x: jnp.ndarray, state: MambaState, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, MambaState]:
+    """One-token decode. x: (B, 1, d_model)."""
+    dims = mamba_dims(cfg)
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z, xbc_new, dt_raw = _split_in_proj(proj, dims)
+
+    # Causal conv via the rolling raw-input state.
+    window = jnp.concatenate([state.conv, xbc_new], axis=1)   # (B, W, C)
+    conv_out = (
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32)
+    )[:, None, :]
+    xbc = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:]
+
+    xin = xbc[..., : dims.d_inner]
+    Bm = xbc[..., dims.d_inner : dims.d_inner + dims.state]
+    Cm = xbc[..., dims.d_inner + dims.state :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xin.reshape(x.shape[0], dims.heads, dims.head_dim)   # (B,h,p)
+
+    decay = jnp.exp(dt[:, 0] * A)                             # (B,h)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0], dt[:, 0], xh)
+    S = state.ssm * decay[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], S)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, dims.d_inner)
+
+    g = jax.nn.silu(z.astype(jnp.float32))
+    yn = y * g
+    ms = jnp.mean(jnp.square(yn), axis=-1, keepdims=True)
+    yn = yn * (ms + 1e-5) ** -0.5 * params["norm_scale"].astype(jnp.float32)
+    out = jnp.einsum("ble,ed->bld", yn.astype(x.dtype), params["out_proj"])
+    return out, MambaState(S, new_conv_state)

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer (top-k routing, group-wise capacity dispatch).
+
+Baseline implementation: Mesh-TF / MaxText style "dropping" MoE, but with
+the capacity defined per *token group* (``group_size`` tokens) instead of
+per batch row. The dispatch one-hot then has shape (B, nG, g, E, C) with
+C ~ g*k/E, so its footprint is B*S*E*C_g — bounded even for small expert
+counts (grok-1's E=8 would need C=1280 with per-row capacity; per-group
+capacity keeps C at ~80).
+
+Experts shard on the "model" mesh axis (expert parallelism) when E divides
+it; otherwise the expert FFN dim shards (tensor-parallel experts — the
+grok-1 path). The dispatch/combine einsums lower to all-to-all-like
+collectives under SPMD.
+
+The §Perf hillclimb iterates on this layer for the collective-bound pairs;
+see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ModelConfig
+from repro.models.init import spec
+
+DEFAULT_GROUP = 256
+
+
+def moe_spec(cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff_
+    return {
+        "router": spec((d, e), ("embed", "expert_in"), "float32", scale=0.1),
+        "w_gate": spec((e, d, f), ("expert", "embed", "ffn"), cfg.param_dtype),
+        "w_up": spec((e, d, f), ("expert", "embed", "ffn"), cfg.param_dtype),
+        "w_down": spec((e, f, d), ("expert", "ffn", "embed"), cfg.param_dtype),
+    }
+
+
+def expert_capacity(group: int, cfg: ModelConfig,
+                    capacity_factor: float = 1.25) -> int:
+    cap = int(group * cfg.experts_per_token * capacity_factor
+              / cfg.num_experts)
+    cap = max(cap, min(4, group * cfg.experts_per_token))
+    return (cap + 7) // 8 * 8  # pad to a lane-friendly multiple
+
+
+def apply_moe(params, x: jnp.ndarray, cfg: ModelConfig,
+              capacity_factor: float = 1.25,
+              group_size: int = DEFAULT_GROUP
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    g = min(group_size, s)
+    if s % g:
+        g = s                      # fall back to one group for odd lengths
+    ng = s // g
+    cap = expert_capacity(g, cfg, capacity_factor)
+
+    router_logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), params["router"]
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)            # (B,S,E)
+    top_w, top_ids = jax.lax.top_k(probs, k)                  # (B,S,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Group view.
+    ids_g = top_ids.reshape(b, ng, g, k)
+    w_g = top_w.reshape(b, ng, g, k)
+    xg = x.reshape(b, ng, g, d)
+
+    # Position of each (token, choice) within its expert's group buffer.
+    sel = jax.nn.one_hot(ids_g, e, dtype=jnp.int32)           # (B,nG,g,k,E)
+    sel_flat = sel.reshape(b, ng, g * k, e)
+    pos = jnp.cumsum(sel_flat, axis=2) - 1                    # (B,nG,g*k,E)
+    pos = pos.reshape(b, ng, g, k, e)
+    within = (pos < cap) & (sel > 0)
+
+    slot = jax.nn.one_hot(jnp.where(within, pos, -1), cap, dtype=x.dtype)
+    dispatch = (slot * within[..., None].astype(x.dtype)).sum(axis=3)
+    combine = (
+        slot * (within.astype(jnp.float32) * w_g[..., None])[..., None]
+    ).sum(axis=3).astype(x.dtype)                             # (B,nG,g,E,C)
+
+    xe = jnp.einsum("bngec,bngd->ebncd", dispatch, xg)        # (E,B,nG,C,d)
+    gate = jnp.einsum("ebncd,edf->ebncf", xe, params["w_gate"])
+    up = jnp.einsum("ebncd,edf->ebncf", xe, params["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    ye = jnp.einsum("ebncf,efd->ebncd", h, params["w_down"])  # (E,B,nG,C,d)
+    y = jnp.einsum("ebncd,bngec->bngd", ye, combine)
+    y = y.reshape(b, s, d)
+
+    # Load-balance auxiliary loss (Switch-style), over the whole batch.
+    frac_tokens = sel.sum(axis=(1, 2, 3)).astype(jnp.float32) / (s * k)
+    frac_probs = probs.mean(axis=1)                           # (B,E)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return y, aux

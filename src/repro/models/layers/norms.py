@@ -1,0 +1,45 @@
+"""Normalization layers: RMSNorm, LayerNorm, and OLMo's non-parametric LN."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.init import spec
+
+
+def rmsnorm_spec(d: int, dtype: str):
+    return {"scale": spec((d,), ("embed",), dtype, init="ones")}
+
+
+def layernorm_spec(d: int, dtype: str):
+    return {
+        "scale": spec((d,), ("embed",), dtype, init="ones"),
+        "bias": spec((d,), ("embed",), dtype, init="zeros"),
+    }
+
+
+def norm_spec(kind: str, d: int, dtype: str):
+    if kind == "rmsnorm":
+        return rmsnorm_spec(d, dtype)
+    if kind == "layernorm":
+        return layernorm_spec(d, dtype)
+    if kind == "nonparametric":
+        return {}  # OLMo: LN without learnable scale/bias [arXiv:2402.00838]
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * (ms + eps) ** -0.5
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    if kind in ("layernorm", "nonparametric"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * (var + eps) ** -0.5
+        if kind == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+                jnp.float32
+            )
+        return y.astype(x.dtype)
+    raise ValueError(kind)

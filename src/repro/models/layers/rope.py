@@ -1,0 +1,70 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE [arXiv:2409.12191] splits the rotary dimension into (temporal,
+height, width) sections and rotates each section by the corresponding
+coordinate of the 3-D position id. For text tokens all three coordinates
+are equal, which makes M-RoPE degenerate to standard RoPE on text.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    half = head_dim // 2
+    exponent = jnp.arange(0, half, dtype=jnp.float32) / half
+    return 1.0 / (theta ** exponent)
+
+
+def _rotate(x, angles):
+    """Apply rotation given per-position angles (..., seq, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles).astype(x.dtype)
+    sin = jnp.sin(angles).astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (batch, seq, heads, head_dim); positions: (batch, seq) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)                  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (B,S,half)
+    return _rotate(x, angles[:, :, None, :])                      # bcast heads
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions_3d: jnp.ndarray,
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    """x: (batch, seq, heads, head_dim); positions_3d: (batch, seq, 3).
+
+    ``sections`` partitions head_dim//2 rotary channels into (t, h, w)
+    groups; section sizes must sum to head_dim // 2.
+    """
+    half = x.shape[-1] // 2
+    if sum(sections) != half:
+        raise ValueError(f"mrope sections {sections} must sum to {half}")
+    freqs = rope_frequencies(x.shape[-1], theta)                  # (half,)
+    # For each rotary channel pick which coordinate drives it.
+    section_id = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )                                                             # (half,)
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),                         # (B,S,3)
+        jnp.broadcast_to(
+            section_id[None, None, :], positions_3d.shape[:2] + (half,)
+        ).astype(jnp.int32),
+        axis=-1,
+    )                                                             # (B,S,half)
+    angles = pos * freqs
+    return _rotate(x, angles[:, :, None, :])
+
+
+def text_positions_3d(positions: jnp.ndarray) -> jnp.ndarray:
+    """Lift 1-D text positions to degenerate 3-D M-RoPE ids (t=h=w)."""
+    return jnp.repeat(positions[..., None], 3, axis=-1)

@@ -1,0 +1,271 @@
+"""xLSTM layers [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent with exponential gating).
+
+mLSTM recurrence (per head, head_dim = dh):
+    m_t = max(f~_t + m_{t-1}, i~_t)
+    i_t = exp(i~_t - m_t),  f_t = exp(f~_t + m_{t-1} - m_t)
+    C_t = f_t C_{t-1} + i_t v_t k_t^T          (k scaled by dh^-1/2)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, 1)
+
+Both train/prefill and decode use the recurrence (train via lax.scan over
+time); a chunkwise-parallel mLSTM is a recorded §Perf candidate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ModelConfig
+from repro.models.init import spec
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.num_heads
+    return d_inner, heads, d_inner // heads
+
+
+def mlstm_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    di, h, dh = mlstm_dims(cfg)
+    w = cfg.ssm_conv_width
+    dt_ = cfg.param_dtype
+    return {
+        "up_proj": spec((d, 2 * di), ("embed", "ssm_in"), dt_),
+        "conv_w": spec((w, di), (None, "ffn"), dt_, scale=0.5),
+        "conv_b": spec((di,), ("ffn",), dt_, init="zeros"),
+        "wq": spec((di, di), ("ffn", "ssm_qk"), dt_),
+        "wk": spec((di, di), ("ffn", "ssm_qk"), dt_),
+        "wv": spec((di, di), ("ffn", "ssm_qk"), dt_),
+        "w_igate": spec((di, h), ("ffn", "heads"), "float32", scale=0.1),
+        "b_igate": spec((h,), ("heads",), "float32", init="zeros"),
+        "w_fgate": spec((di, h), ("ffn", "heads"), "float32", scale=0.1),
+        "b_fgate": spec((h,), ("heads",), "float32", init="ones"),
+        "skip": spec((di,), ("ffn",), dt_, init="ones"),
+        "out_norm": spec((di,), ("ffn",), dt_, init="ones"),
+        "down_proj": spec((di, d), ("ffn", "embed"), dt_),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray     # (B, h, dh, dh) float32
+    n: jnp.ndarray     # (B, h, dh)
+    m: jnp.ndarray     # (B, h)
+    conv: jnp.ndarray  # (B, width-1, d_inner)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype) -> MLSTMState:
+    di, h, dh = mlstm_dims(cfg)
+    return MLSTMState(
+        jnp.zeros((batch, h, dh, dh), jnp.float32),
+        jnp.zeros((batch, h, dh), jnp.float32),
+        jnp.full((batch, h), -1e30, jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+    )
+
+
+def _mlstm_cell_scan(q, k, v, ig, fg, state: MLSTMState):
+    """q,k,v: (B,L,h,dh) f32; ig,fg: (B,L,h) f32. Returns (y, state)."""
+    dh = q.shape[-1]
+    k = k * dh ** -0.5
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, it_, ft_ = t
+        m_new = jnp.maximum(ft_ + m, it_)                       # (B,h)
+        i = jnp.exp(it_ - m_new)
+        f = jnp.exp(ft_ + m - m_new)
+        C = C * f[..., None, None] + i[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :]
+        )                                                       # (B,h,dh_v,dh_k)
+        n = n * f[..., None] + i[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        y = num / den[..., None]
+        return (C, n, m_new), y
+
+    xs = tuple(a.swapaxes(0, 1) for a in (q, k, v, ig, fg))
+    (C, n, m), ys = jax.lax.scan(step, (state.C, state.n, state.m), xs)
+    return ys.swapaxes(0, 1), (C, n, m)
+
+
+def _conv_silu(x, w, b, conv_state=None):
+    """Causal depthwise conv + silu. x: (B,L,C)."""
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([conv_state, x], axis=1)
+    out = jnp.zeros_like(x, shape=x.shape)
+    for i in range(width):
+        out = out + pad[:, i : i + x.shape[1]] * w[i]
+    new_state = pad[:, -(width - 1) :] if width > 1 else pad[:, :0]
+    return jax.nn.silu((out + b).astype(jnp.float32)), new_state
+
+
+def _headwise_rmsnorm(y, scale, heads):
+    """GroupNorm-ish per-head RMS norm. y: (B,L,h,dh) f32."""
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * (ms + 1e-5) ** -0.5
+    b, l, h, dh = y.shape
+    return y.reshape(b, l, h * dh) * scale.astype(jnp.float32)
+
+
+def apply_mlstm(
+    params, x: jnp.ndarray, cfg: ModelConfig, state: MLSTMState = None
+) -> Tuple[jnp.ndarray, Tuple]:
+    """x: (B, L, d). Returns (out, (C, n, m, conv_state))."""
+    di, h, dh = mlstm_dims(cfg)
+    b, l, _ = x.shape
+    if state is None:
+        state = init_mlstm_state(cfg, b, x.dtype)
+    up = jnp.einsum("bld,de->ble", x, params["up_proj"])
+    xin, z = up[..., :di], up[..., di:]
+    xc, new_conv = _conv_silu(xin, params["conv_w"], params["conv_b"], state.conv)
+    xc = xc.astype(x.dtype)
+
+    q = jnp.einsum("ble,ef->blf", xc, params["wq"]).reshape(b, l, h, dh)
+    k = jnp.einsum("ble,ef->blf", xc, params["wk"]).reshape(b, l, h, dh)
+    v = jnp.einsum("ble,ef->blf", xin, params["wv"]).reshape(b, l, h, dh)
+    ig = (
+        jnp.einsum("ble,eh->blh", xc.astype(jnp.float32), params["w_igate"])
+        + params["b_igate"]
+    )
+    fg = (
+        jnp.log(
+            jax.nn.sigmoid(
+                jnp.einsum("ble,eh->blh", xc.astype(jnp.float32), params["w_fgate"])
+                + params["b_fgate"]
+            )
+            + 1e-30
+        )
+    )
+    y, (C, n, m) = _mlstm_cell_scan(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        ig, fg, state
+    )
+    y = _headwise_rmsnorm(y, params["out_norm"], h)             # (B,L,di) f32
+    y = y + xc.astype(jnp.float32) * params["skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("ble,ed->bld", y.astype(x.dtype), params["down_proj"])
+    return out, MLSTMState(C, n, m, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    w = cfg.ssm_conv_width
+    dt_ = cfg.param_dtype
+    ffn = int(round(4 / 3 * d / 64)) * 64 or 64
+    p = {
+        "conv_w": spec((w, d), (None, "embed"), dt_, scale=0.5),
+        "conv_b": spec((d,), ("embed",), dt_, init="zeros"),
+        "out_norm": spec((d,), ("embed",), dt_, init="ones"),
+        "ffn_gate": spec((d, ffn), ("embed", "ffn"), dt_),
+        "ffn_up": spec((d, ffn), ("embed", "ffn"), dt_),
+        "ffn_down": spec((ffn, d), ("ffn", "embed"), dt_),
+    }
+    for gate in ("z", "i", "f", "o"):
+        p[f"w_{gate}"] = spec((d, d), ("embed", "ssm_qk"), dt_)
+        p[f"r_{gate}"] = spec((h, dh, dh), ("heads", "head_dim", None), dt_,
+                              scale=0.5)
+        p[f"b_{gate}"] = spec(
+            (d,), ("ssm_qk",), "float32",
+            init="ones" if gate == "f" else "zeros",
+        )
+    return p
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray     # (B, h, dh) float32
+    n: jnp.ndarray
+    hid: jnp.ndarray
+    m: jnp.ndarray     # (B, h, dh)
+    conv: jnp.ndarray  # (B, width-1, d)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype) -> SLSTMState:
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return SLSTMState(
+        z, z, z, jnp.full((batch, h, dh), -1e30, jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.d_model), dtype),
+    )
+
+
+def apply_slstm(
+    params, x: jnp.ndarray, cfg: ModelConfig, state: SLSTMState = None
+) -> Tuple[jnp.ndarray, SLSTMState]:
+    """Strictly sequential sLSTM. x: (B, L, d)."""
+    b, l, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    if state is None:
+        state = init_slstm_state(cfg, b, x.dtype)
+
+    xc, new_conv = _conv_silu(x, params["conv_w"], params["conv_b"], state.conv)
+    xc = xc.astype(x.dtype)
+
+    def head(v):
+        return v.reshape(*v.shape[:-1], h, dh).astype(jnp.float32)
+
+    pre = {
+        g: head(
+            jnp.einsum("bld,de->ble", xc if g in ("i", "f") else x,
+                       params[f"w_{g}"])
+            + params[f"b_{g}"].astype(x.dtype)
+        )
+        for g in ("z", "i", "f", "o")
+    }
+    R = {g: params[f"r_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    def step(carry, t):
+        c, n, hid, m = carry
+        pz, pi, pf, po = t
+
+        def rec(g):
+            return jnp.einsum("bhk,hkv->bhv", hid, R[g])
+
+        zt = jnp.tanh(pz + rec("z"))
+        it_ = pi + rec("i")
+        ft_ = pf + rec("f")
+        ot = jax.nn.sigmoid(po + rec("o"))
+        logf = jnp.log(jax.nn.sigmoid(ft_) + 1e-30)
+        m_new = jnp.maximum(logf + m, it_)
+        i = jnp.exp(it_ - m_new)
+        f = jnp.exp(logf + m - m_new)
+        c = f * c + i * zt
+        n = f * n + i
+        hid_new = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, hid_new, m_new), hid_new
+
+    xs = tuple(pre[g].swapaxes(0, 1) for g in ("z", "i", "f", "o"))
+    (c, n, hid, m), ys = jax.lax.scan(
+        step, (state.c, state.n, state.hid, state.m), xs
+    )
+    y = ys.swapaxes(0, 1)                                       # (B,L,h,dh)
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * (ms + 1e-5) ** -0.5).reshape(b, l, d)
+    y = (y * params["out_norm"].astype(jnp.float32)).astype(x.dtype)
+
+    # Post-FFN (GeGLU 4/3, per xLSTM block design).
+    gate = jnp.einsum("bld,df->blf", y, params["ffn_gate"])
+    up = jnp.einsum("bld,df->blf", y, params["ffn_up"])
+    hred = jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out = jnp.einsum("blf,fd->bld", hred, params["ffn_down"])
+    return out, SLSTMState(c, n, hid, m, new_conv)

@@ -1,0 +1,360 @@
+"""Architecture assembly: segment plan, parameter specs, and the three
+entry points (train forward, prefill, single-token decode) for every
+assigned architecture family (dense / moe / ssm / hybrid / vlm / audio).
+
+The CNN family (paper testbed) lives in ``repro.models.cnn``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import ModelConfig
+from repro.models import blocks as blk
+from repro.models.init import spec, stack_tree
+from repro.models.layers.norms import apply_norm, norm_spec
+from repro.sharding.activation import constrain
+
+_HID = ("batch", "seq", "embed")   # layer-boundary activation layout
+
+
+# ---------------------------------------------------------------------------
+# Segment plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int          # layers in this scan (1 for shared 'A')
+    shared: bool = False
+
+
+def default_pattern(cfg: ModelConfig) -> str:
+    if cfg.block_pattern:
+        return cfg.block_pattern
+    if cfg.family == "moe":
+        return "e" * cfg.num_layers
+    return "d" * cfg.num_layers
+
+
+def segment_plan(cfg: ModelConfig) -> List[Segment]:
+    """Split the block pattern into contiguous same-kind runs; interleave the
+    zamba-style shared attention block every ``shared_attention_every``."""
+    pattern = default_pattern(cfg)
+    if cfg.shared_attention_every:
+        out: List[Segment] = []
+        period = cfg.shared_attention_every
+        i = 0
+        while i < len(pattern):
+            run = pattern[i : i + period]
+            out.append(Segment(run[0], len(run)))
+            i += period
+            out.append(Segment("A", 1, shared=True))
+        return out
+    out = []
+    i = 0
+    while i < len(pattern):
+        j = i
+        while j < len(pattern) and pattern[j] == pattern[i]:
+            j += 1
+        out.append(Segment(pattern[i], j - i))
+        i = j
+    return out
+
+
+def num_shared_invocations(plan: List[Segment]) -> int:
+    return sum(1 for s in plan if s.shared)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    plan = segment_plan(cfg)
+    dt_ = cfg.param_dtype
+    specs: Dict[str, Any] = {
+        "embed": spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), dt_,
+                      init="embed", scale=0.02),
+        "final_norm": norm_spec(cfg.norm_kind, cfg.d_model, dt_),
+        "segments": [
+            stack_tree(blk.block_spec(s.kind, cfg), s.count)
+            if not s.shared
+            else {}
+            for s in plan
+        ],
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = spec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), dt_, scale=0.02
+        )
+    if cfg.shared_attention_every:
+        specs["shared_attn"] = blk.block_spec("A", cfg)
+    if cfg.family == "vlm":
+        specs["vision_proj"] = spec(
+            (cfg.d_model, cfg.d_model), ("embed", "embed_out"), dt_
+        )
+    if cfg.is_encdec:
+        specs["encoder"] = {
+            "segments": [
+                stack_tree(blk.block_spec("E", cfg), cfg.num_encoder_layers)
+            ],
+            "final_norm": norm_spec("layernorm", cfg.d_model, dt_),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def effective_window(cfg: ModelConfig, seq_len: int) -> int:
+    """Sliding-window size in effect for this sequence length."""
+    if not cfg.attention_window:
+        return 0
+    if cfg.window_only_for_long and seq_len <= 32_768:
+        return 0
+    return cfg.attention_window
+
+
+def _logits(specs_params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = apply_norm(cfg.norm_kind, specs_params["final_norm"], x)
+    if cfg.tie_embeddings:
+        lg = jnp.einsum("bsd,vd->bsv", x, specs_params["embed"])
+    else:
+        lg = jnp.einsum("bsd,dv->bsv", x, specs_params["lm_head"])
+    # Keep the (B,S,V) tensor vocab-sharded through the loss; unsharded it
+    # is tens of GiB per device at production shapes.
+    return constrain(lg, ("batch", "seq", "vocab"))
+
+
+def _vision_positions_3d(n_vis: int, text_len: int, batch: int) -> jnp.ndarray:
+    """M-RoPE 3-D ids: vision tokens at t=0 on an h*w grid, then text tokens
+    t = 1..text_len with h = w = t (Qwen2-VL convention, simplified)."""
+    side = max(int(math.ceil(math.sqrt(n_vis))), 1)
+    idx = jnp.arange(n_vis)
+    vis = jnp.stack([jnp.zeros_like(idx), idx // side, idx % side], axis=-1)
+    t = jnp.arange(text_len) + 1
+    txt = jnp.stack([t, t, t], axis=-1)
+    pos = jnp.concatenate([vis, txt], axis=0)
+    return jnp.broadcast_to(pos[None], (batch, n_vis + text_len, 3)).astype(
+        jnp.int32
+    )
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Token (+ modality-stub) embedding. Returns (x, positions, pos3d)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    scale = jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = x * scale
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = jnp.einsum("bnd,de->bne", batch["vision_embeds"].astype(x.dtype),
+                         params["vision_proj"])
+        x = jnp.concatenate([vis, x], axis=1)
+        n_vis, text_len = vis.shape[1], tokens.shape[1]
+        pos3d = _vision_positions_3d(n_vis, text_len, b)
+        positions = jnp.broadcast_to(
+            jnp.arange(n_vis + text_len)[None], (b, n_vis + text_len)
+        )
+        return x, positions, pos3d
+    s = tokens.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos3d = None
+    return x, positions, pos3d
+
+
+def run_encoder(params, cfg: ModelConfig, src: jnp.ndarray) -> jnp.ndarray:
+    """Seamless-style encoder over precomputed (stub) frame embeddings."""
+    x = constrain(src.astype(jnp.dtype(cfg.dtype)), _HID)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    ctx = blk.SeqContext(positions, None, 0, 0)
+
+    def body(carry, layer_params):
+        h, = carry
+        h, _, _ = blk.block_apply_seq("E", layer_params, h, ctx, cfg)
+        return (constrain(h, _HID),), None
+
+    if cfg.block_remat:
+        body = jax.checkpoint(body)
+    (x,), _ = jax.lax.scan(
+        body, (x,), params["encoder"]["segments"][0],
+        unroll=cfg.num_encoder_layers if cfg.scan_unroll else 1,
+    )
+    return apply_norm("layernorm", params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward_seq(
+    params,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    cache_len: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[List[Any]]]:
+    """Returns (logits, aux_loss, caches). ``cache_len`` > 0 builds decode
+    caches (prefill mode)."""
+    plan = segment_plan(cfg)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = run_encoder(params, cfg, batch["src_frames"])
+
+    x, positions, pos3d = embed_inputs(params, cfg, batch)
+    x = constrain(x, _HID)
+    window = effective_window(cfg, x.shape[1])
+    ctx = blk.SeqContext(positions, pos3d, window, cache_len, enc_out)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: List[Any] = []
+    for seg, seg_params in zip(plan, params["segments"]):
+        if seg.shared:
+            x, aux, cache = blk.block_apply_seq(
+                "A", params["shared_attn"], x, ctx, cfg
+            )
+            aux_total += aux
+            caches.append(cache)
+            continue
+
+        def body(carry, layer_params, kind=seg.kind):
+            h, aux_acc = carry
+            h, aux, cache = blk.block_apply_seq(kind, layer_params, h, ctx, cfg)
+            return (constrain(h, _HID), aux_acc + aux), cache
+
+        if cfg.block_remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), cache_stack = jax.lax.scan(
+            body, (x, aux_total), seg_params,
+            unroll=seg.count if cfg.scan_unroll else 1,
+        )
+        caches.append(cache_stack)
+
+    logits = _logits(params, cfg, x)
+    return logits, aux_total, (caches if cache_len else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                enc_len: int = 0) -> List[Any]:
+    """Zero decode caches; structure mirrors forward_seq's cache output."""
+    plan = segment_plan(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    caches = []
+    for seg in plan:
+        one = blk.init_block_cache(seg.kind, cfg, batch, cache_len, dtype,
+                                   enc_len)
+        if seg.shared:
+            caches.append(one)
+        else:
+            caches.append(
+                jax.tree.map(lambda a: jnp.broadcast_to(
+                    a[None], (seg.count,) + a.shape
+                ).copy() if hasattr(a, "shape") else a, one)
+            )
+    return caches
+
+
+def cache_logical_axes(cfg: ModelConfig) -> List[Any]:
+    """Logical-axis tree mirroring ``init_caches`` output structure."""
+    plan = segment_plan(cfg)
+    out = []
+    for seg in plan:
+        axes = blk.block_cache_axes(seg.kind, cfg)
+        if seg.shared:
+            out.append(axes)
+        else:
+            out.append(jax.tree.map(
+                lambda a: ("layers",) + a,
+                axes,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x
+                ),
+            ))
+    return out
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,      # (B, 1)
+    pos: jnp.ndarray,         # () int32
+    caches: List[Any],
+) -> Tuple[jnp.ndarray, List[Any]]:
+    """One decode step. Returns (logits (B,1,V), new caches)."""
+    plan = segment_plan(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype), _HID)
+    window = effective_window(cfg, int(_decode_seq_hint(cfg, caches)))
+    pos3d = None
+    if cfg.rope_kind == "mrope":
+        p = jnp.broadcast_to(pos, (x.shape[0], 1))
+        pos3d = jnp.stack([p, p, p], axis=-1)
+    ctx = blk.DecodeContext(pos, window, pos3d)
+
+    new_caches: List[Any] = []
+    for seg, seg_params, cache in zip(plan, params["segments"], caches):
+        if seg.shared:
+            x, new_c = blk.block_apply_decode(
+                "A", params["shared_attn"], x, cache, ctx, cfg
+            )
+            new_caches.append(new_c)
+            continue
+
+        def body(h, xs, kind=seg.kind):
+            layer_params, layer_cache = xs
+            h, new_c = blk.block_apply_decode(kind, layer_params, h,
+                                              layer_cache, ctx, cfg)
+            return constrain(h, _HID), new_c
+
+        x, cache_stack = jax.lax.scan(
+            body, x, (seg_params, cache),
+            unroll=seg.count if cfg.scan_unroll else 1,
+        )
+        new_caches.append(cache_stack)
+
+    logits = _logits(params, cfg, x)
+    return logits, new_caches
+
+
+def _decode_seq_hint(cfg: ModelConfig, caches) -> int:
+    """Recover the nominal sequence length from attention cache shapes (used
+    only to pick the window; SSM-only models return 0)."""
+    for seg_cache in caches:
+        if isinstance(seg_cache, dict) and "k" in seg_cache:
+            k = seg_cache["k"]
+            return k.shape[-3] if k.ndim >= 4 else 0
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def next_token_loss(logits: jnp.ndarray, tokens: jnp.ndarray,
+                    aux: jnp.ndarray, cfg: ModelConfig,
+                    text_offset: int = 0) -> jnp.ndarray:
+    """Causal LM loss; ``text_offset`` skips modality-prefix positions."""
+    lg = logits[:, text_offset:, :]
+    pred = lg[:, :-1].astype(jnp.float32)
+    tgt = tokens[:, 1:]
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    return nll + cfg.router_aux_loss * aux

@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay, cosine LR schedule and global-norm
+gradient clipping — implemented directly (no optax dependency) so the
+optimizer state tree shares the parameter sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray     # () int32
+    mu: Any               # first moment  (tree like params, f32)
+    nu: Any               # second moment (tree like params, f32)
+
+
+def init_state(params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def cosine_lr(cfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def apply_updates(
+    params, grads, state: AdamWState, cfg: TrainConfig
+) -> Tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * jnp.square(gf)
+        m_hat = m_new / (1 - b1 ** step)
+        v_hat = v_new / (1 - b2 ** step)
+        delta = m_hat / (jnp.sqrt(v_hat) + 1e-8)
+        p_new = (
+            p.astype(jnp.float32)
+            - lr * (delta + cfg.weight_decay * p.astype(jnp.float32))
+        )
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, AdamWState(step, new_mu, new_nu), metrics

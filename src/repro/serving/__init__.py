@@ -1,0 +1,10 @@
+from repro.serving.engine import ServeSession, Request, RequestScheduler
+from repro.serving.edge_cloud import EdgeCloudServer, LatencyBreakdown
+
+__all__ = [
+    "ServeSession",
+    "Request",
+    "RequestScheduler",
+    "EdgeCloudServer",
+    "LatencyBreakdown",
+]

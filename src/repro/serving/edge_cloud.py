@@ -1,0 +1,154 @@
+"""Edge-cloud JALAD serving runtime (the paper's deployment, Fig. 1).
+
+A simulated-clock execution of decoupled inference:
+
+  edge compute (T = w*Q_edge/F_edge)  ->  compress (real Huffman bytes)
+  ->  channel transfer (bytes / BW, with a bandwidth trace)
+  ->  cloud compute (T = w*Q_cloud/F_cloud)
+
+The numerical result is produced by actually running the decoupled model
+(head -> compress -> decompress -> tail); the latency is accounted with the
+paper's FMAC model so experiments are device-independent and reproducible.
+The AdaptationController re-solves the ILP as the bandwidth trace drifts —
+reproducing the paper's Fig. 8 behaviour ("JALAD remains a stable low
+latency by adaptively changing the decoupling strategy").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config.types import JaladConfig
+from repro.core.adaptation import AdaptationController
+from repro.core.decoupler import DecoupledPlan, DecoupledRunner, JaladEngine
+from repro.core.latency import LatencyModel, PNG_RATIO
+
+
+@dataclass
+class LatencyBreakdown:
+    edge_s: float
+    transfer_s: float
+    cloud_s: float
+    bytes_sent: int
+    plan_point: int
+    plan_bits: int
+
+    @property
+    def total_s(self) -> float:
+        return self.edge_s + self.transfer_s + self.cloud_s
+
+
+@dataclass
+class EdgeCloudServer:
+    """Serves batches through the current JALAD decoupling."""
+
+    engine: JaladEngine
+    params: Any
+    controller: AdaptationController = None
+    clock: float = 0.0
+    log: List[LatencyBreakdown] = field(default_factory=list)
+    _runner_cache: Dict[Tuple[int, int], DecoupledRunner] = field(
+        default_factory=dict
+    )
+
+    def __post_init__(self):
+        if self.controller is None:
+            self.controller = AdaptationController(self.engine)
+
+    def _runner(self, plan: DecoupledPlan) -> DecoupledRunner:
+        key = (plan.point, plan.bits)
+        if key not in self._runner_cache:
+            self._runner_cache[key] = self.engine.make_runner(self.params,
+                                                              plan)
+        return self._runner_cache[key]
+
+    def serve_batch(self, batch, bandwidth: float) -> Tuple[Any, LatencyBreakdown]:
+        """Run one batch at the given true bandwidth; returns (logits,
+        latency breakdown). Advances the simulated clock."""
+        plan = self.controller.current_plan(bandwidth)
+        lat = self.engine.latency
+        if plan.is_cloud_only:
+            t = lat.cloud_only_time(bandwidth, image_ratio=PNG_RATIO)
+            # numerics: full model on the "cloud"
+            import jax
+
+            logits = jax.jit(self.engine.model.forward)(self.params, batch)
+            bd = LatencyBreakdown(0.0, t - lat.cloud.exec_time(
+                float(np.sum(lat.fmacs_per_point))
+            ), lat.cloud.exec_time(float(np.sum(lat.fmacs_per_point))),
+                int(lat.input_bytes * PNG_RATIO), -1, 0)
+        else:
+            runner = self._runner(plan)
+            blob, extras = runner.edge_step(batch)
+            logits = runner.cloud_step(blob, extras)
+            edge_t = float(lat.edge_times()[plan.point])
+            cloud_t = float(lat.cloud_times()[plan.point])
+            transfer_t = blob.nbytes / bandwidth
+            bd = LatencyBreakdown(edge_t, transfer_t, cloud_t, blob.nbytes,
+                                  plan.point, plan.bits)
+        # Feed the controller's bandwidth estimator with the observation.
+        self.controller.observe_transfer(max(bd.bytes_sent, 1),
+                                         max(bd.transfer_s, 1e-9))
+        self.clock += bd.total_s
+        self.log.append(bd)
+        return logits, bd
+
+    def serve_trace(self, batches: Iterable, bandwidth_trace: Iterable[float]
+                    ) -> List[LatencyBreakdown]:
+        """Serve a stream of batches under a bandwidth trace (Fig. 8)."""
+        out = []
+        for batch, bw in zip(batches, bandwidth_trace):
+            _, bd = self.serve_batch(batch, bw)
+            out.append(bd)
+        return out
+
+
+def build_edge_cloud_server(
+    cfg,
+    jalad_cfg: JaladConfig,
+    *,
+    seed: int = 0,
+    calib_batches: int = 2,
+    calib_batch_size: int = 8,
+    seq_len: int = 64,
+    params: Any = None,
+    points: Optional[List[int]] = None,
+) -> Tuple[EdgeCloudServer, Any]:
+    """End-to-end factory: model -> calibration -> predictors -> latency
+    model -> ILP engine -> server. The calibration measures accuracy drop
+    against the un-quantized model's own predictions when no labels exist
+    (prediction fidelity), exactly how A_i(c) behaves for a deployed
+    pre-trained model."""
+    import jax
+
+    from repro.core.predictor import build_tables
+    from repro.data.synthetic import make_batch
+    from repro.models.api import build_model
+
+    model = build_model(cfg)
+    if params is None:
+        params = model.init(jax.random.key(seed))
+    batches = [
+        make_batch(cfg, calib_batch_size, seq_len, seed=seed + 10 + i)
+        for i in range(calib_batches)
+    ]
+    n_points = len(model.decoupling_points())
+    if points is None and n_points > 24:
+        # Subsample decoupling points for deep models (keeps calibration
+        # tractable; the ILP operates on the sampled rows).
+        step = max(n_points // 16, 1)
+        points = list(range(0, n_points, step))
+    tables = build_tables(model, params, batches,
+                          list(jalad_cfg.bits_choices), points=points)
+    if cfg.family == "cnn":
+        input_bytes = calib_batch_size * 3 * cfg.image_size * cfg.image_size
+    else:
+        input_bytes = calib_batch_size * seq_len * 4
+    fmacs = model.per_point_fmacs(calib_batch_size, seq_len)
+    lat = LatencyModel(fmacs, jalad_cfg.edge, jalad_cfg.cloud,
+                       float(input_bytes))
+    engine = JaladEngine(model, tables, lat, jalad_cfg,
+                         point_indices=points)
+    return EdgeCloudServer(engine, params), params

@@ -1,0 +1,101 @@
+"""Serving runtime: KV-cache sessions (prefill + decode), greedy/temperature
+sampling, and a simple request batcher. Architecture-agnostic — works for
+every family via the Model API (SSM states are just another cache kind).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.types import ModelConfig, ServeConfig
+from repro.models.api import Model
+
+
+@dataclass
+class ServeSession:
+    """One batched generation session against a shared KV cache."""
+
+    model: Model
+    params: Any
+    cfg: ServeConfig
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.cfg.max_seq_len)
+        )
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(
+        self,
+        batch: Dict[str, Any],
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """Prefill on the prompt batch then decode ``max_new_tokens``."""
+        logits, caches = self._prefill(self.params, batch)
+        prompt_len = batch["tokens"].shape[1]
+        pos = prompt_len
+        last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [np.asarray(last)]
+        key = jax.random.key(seed)
+        for step in range(max_new_tokens - 1):
+            logits, caches = self._decode(
+                self.params, last, jnp.int32(pos), caches
+            )
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                last = jax.random.categorical(
+                    sub, logits[:, -1] / temperature
+                )[:, None].astype(jnp.int32)
+            else:
+                last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(np.asarray(last))
+            pos += 1
+        return np.concatenate(out, axis=1)
+
+
+@dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray            # (prompt_len,)
+    max_new_tokens: int
+    arrival: float = 0.0
+    result: Optional[np.ndarray] = None
+    done_at: float = 0.0
+
+
+@dataclass
+class RequestScheduler:
+    """Batches requests up to ``max_batch`` (padding prompts to a common
+    length) and runs them through a ServeSession."""
+
+    session: ServeSession
+    queue: List[Request] = field(default_factory=list)
+    completed: List[Request] = field(default_factory=list)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def step(self) -> List[Request]:
+        if not self.queue:
+            return []
+        batch_reqs = self.queue[: self.session.cfg.max_batch]
+        self.queue = self.queue[len(batch_reqs):]
+        max_prompt = max(len(r.tokens) for r in batch_reqs)
+        toks = np.zeros((len(batch_reqs), max_prompt), np.int32)
+        for i, r in enumerate(batch_reqs):
+            toks[i, -len(r.tokens):] = r.tokens     # left-pad
+        max_new = max(r.max_new_tokens for r in batch_reqs)
+        out = self.session.generate({"tokens": jnp.asarray(toks)}, max_new)
+        now = time.time()
+        for i, r in enumerate(batch_reqs):
+            r.result = out[i, : r.max_new_tokens]
+            r.done_at = now
+            self.completed.append(r)
+        return batch_reqs

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    resolve_spec,
+    shardings_for_specs,
+)
+
+__all__ = ["DEFAULT_RULES", "resolve_spec", "shardings_for_specs"]

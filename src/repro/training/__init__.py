@@ -1,0 +1,3 @@
+from repro.training.loop import make_train_step, make_loss_fn, train, TrainResult
+
+__all__ = ["make_train_step", "make_loss_fn", "train", "TrainResult"]

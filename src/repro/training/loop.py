@@ -1,0 +1,132 @@
+"""Training: jitted train_step (loss -> grad -> AdamW update), optional
+gradient accumulation (microbatching) and rematerialization, and the host
+training loop with metrics + checkpointing.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.types import TrainConfig
+from repro.models.api import Model
+from repro.optim import adamw
+from repro.utils.log import get_logger
+
+log = get_logger("repro.training")
+
+
+def make_loss_fn(model: Model, remat: str = "none") -> Callable:
+    if remat == "blocks":
+        # Per-layer remat inside the scan: saves only block boundaries
+        # (the standard production policy; O(layers) activation memory).
+        from repro.models.api import Model as _M
+        model = _M(cfg=model.cfg.replace(block_remat=True),
+                   specs=model.specs)
+        return model.loss_fn
+    loss = model.loss_fn
+    if remat == "full":
+        loss = jax.checkpoint(loss)
+    elif remat == "dots":
+        loss = jax.checkpoint(
+            loss, policy=jax.checkpoint_policies.checkpoint_dots
+        )
+    return loss
+
+
+def make_train_step(model: Model, cfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). With ``cfg.microbatches > 1`` the global batch is split on the
+    leading axis and gradients are accumulated in a scan."""
+    loss_fn = make_loss_fn(model, cfg.remat)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def single(params, batch):
+        return grad_fn(params, batch)
+
+    def accumulated(params, batch):
+        mb = cfg.microbatches
+
+        def reshape(x):
+            b = x.shape[0]
+            return x.reshape(mb, b // mb, *x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def body(carry, mbatch):
+            loss_acc, grad_acc = carry
+            loss, grads = grad_fn(params, mbatch)
+            grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            body, (0.0, zero), micro,
+            unroll=mb if model.cfg.scan_unroll else 1,
+        )
+        scale = 1.0 / mb
+        return loss_sum * scale, jax.tree.map(
+            lambda g: (g * scale).astype(g.dtype), grad_sum
+        )
+
+    compute = accumulated if cfg.microbatches > 1 else single
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute(params, batch)
+        params, opt_state, m = adamw.apply_updates(params, grads, opt_state,
+                                                   cfg)
+        metrics = {"loss": loss, **m}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    params: Any
+    opt_state: Any
+    losses: List[float] = field(default_factory=list)
+    steps_per_sec: float = 0.0
+
+
+def train(
+    model: Model,
+    cfg: TrainConfig,
+    data: Iterable[Dict],
+    *,
+    params=None,
+    num_steps: Optional[int] = None,
+    jit: bool = True,
+) -> TrainResult:
+    """Host loop: init -> step -> metrics; returns params + loss history."""
+    steps = num_steps or cfg.total_steps
+    if params is None:
+        params = model.init(jax.random.key(cfg.seed))
+    opt_state = adamw.init_state(params)
+    step_fn = make_train_step(model, cfg)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    losses: List[float] = []
+    it = iter(data)
+    t0 = time.perf_counter()
+    for step in range(steps):
+        batch = next(it)
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if cfg.log_every and step % cfg.log_every == 0:
+            log.info("step %d loss %.4f lr %.2e gnorm %.2f", step, loss,
+                     float(metrics["lr"]), float(metrics["grad_norm"]))
+        if cfg.checkpoint_every and cfg.checkpoint_dir and \
+                (step + 1) % cfg.checkpoint_every == 0:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(cfg.checkpoint_dir, step + 1, params, opt_state)
+    dt = time.perf_counter() - t0
+    return TrainResult(params, opt_state, losses, steps / max(dt, 1e-9))

@@ -1,0 +1,15 @@
+from repro.utils.tree import (
+    tree_size_bytes,
+    tree_param_count,
+    tree_map_with_path_names,
+    check_no_nans,
+)
+from repro.utils.log import get_logger
+
+__all__ = [
+    "tree_size_bytes",
+    "tree_param_count",
+    "tree_map_with_path_names",
+    "check_no_nans",
+    "get_logger",
+]

@@ -1,0 +1,58 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes across all leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_map_with_path_names(fn, tree):
+    """tree_map where fn receives ("a/b/c", leaf)."""
+
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_name(p), x), tree)
+
+
+def check_no_nans(tree, where: str = "") -> None:
+    """Raise if any leaf contains NaN/Inf. Host-side; forces values."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating):
+            if not np.isfinite(arr).all():
+                raise FloatingPointError(
+                    f"non-finite values at {where}{jax.tree_util.keystr(path)}"
+                )
+
+
+def cast_floating(tree, dtype):
+    """Cast floating leaves to dtype, leave ints alone."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)

@@ -1,0 +1,76 @@
+"""End-to-end feature compression (quantize -> Huffman) + the RL
+channel-removal extension (paper Sec. I: "reinforcement learning based
+channel-wise feature removal")."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel_removal import (
+    ChannelRemovalPolicy,
+    apply_channel_mask,
+    train_channel_policy,
+)
+from repro.core.compression import compress, decompress, transfer_size_bytes
+
+
+@given(st.integers(0, 2**31), st.sampled_from([2, 4, 8]))
+@settings(max_examples=30, deadline=None)
+def test_compress_roundtrip_bounded(seed, bits):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((4, 6, 6)).astype(np.float32)
+    x[np.abs(x) < 0.4] = 0.0
+    blob = compress(jnp.asarray(x), bits)
+    back = decompress(blob)
+    step = (x.max() - x.min()) / ((1 << bits) - 1)
+    assert np.abs(back - x).max() <= step / 2 + 1e-6
+    assert blob.shape == x.shape
+
+
+def test_transfer_size_matches_blob():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((8, 16)).astype(np.float32)
+    x[np.abs(x) < 0.5] = 0.0
+    xj = jnp.asarray(x)
+    blob = compress(xj, 8)
+    est = transfer_size_bytes(xj, 8)
+    assert abs(est - blob.nbytes) <= 64
+
+
+def test_sparse_features_compress_10x_vs_float():
+    """Paper Fig. 3: compression reduces feature maps to 1/10-1/100."""
+    rng = np.random.default_rng(0)
+    x = np.maximum(rng.standard_normal((32, 28, 28)), 0).astype(np.float32)
+    x[x < 1.0] = 0.0          # post-ReLU-like, very sparse
+    blob = compress(jnp.asarray(x), 4)
+    assert blob.nbytes < x.nbytes / 10
+
+
+def test_channel_mask_application():
+    x = jnp.ones((2, 3, 4))
+    mask = np.array([1.0, 0.0, 1.0, 0.0])
+    y = apply_channel_mask(x, mask, axis=-1)
+    assert float(y[..., 1].sum()) == 0.0
+    assert float(y[..., 0].sum()) == 6.0
+
+
+def test_policy_learns_to_drop_useless_channels():
+    """Bandit reward: channels 0..3 matter, 4..7 are noise. The trained
+    policy must keep the useful ones with higher probability."""
+    policy = ChannelRemovalPolicy(num_channels=8, removal_budget=0.5)
+
+    def evaluate(mask):
+        # accuracy drop = how many of the useful channels were removed
+        return float(np.sum(1 - mask[:4]) * 0.05)
+
+    trained = train_channel_policy(policy, evaluate, steps=300)
+    probs = trained.keep_probs()
+    assert probs[:4].mean() > probs[4:].mean() + 0.1
+
+
+def test_deterministic_mask_respects_budget():
+    policy = ChannelRemovalPolicy(num_channels=16, removal_budget=0.25)
+    policy.logits[:] = -6.0   # policy wants to drop everything
+    mask = policy.deterministic_mask()
+    # budget caps removals at 25% regardless of the policy's appetite
+    assert mask.sum() >= 16 - int(0.25 * 16)

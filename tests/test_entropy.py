@@ -1,0 +1,64 @@
+"""Huffman coding of quantized feature maps (Sec. III-B: "the in-layer
+feature maps are highly sparse ... we introduce Huffman Coding")."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.entropy import (
+    entropy_bits_per_symbol,
+    entropy_size_bytes,
+    huffman_decode,
+    huffman_encode,
+    huffman_size_bytes,
+)
+
+
+@given(st.integers(0, 2**31), st.integers(1, 2000),
+       st.sampled_from([4, 16, 256]))
+@settings(max_examples=40, deadline=None)
+def test_roundtrip(seed, n, nsym):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, nsym, size=n)
+    blob = huffman_encode(codes, nsym)
+    back = huffman_decode(blob)
+    np.testing.assert_array_equal(back.reshape(-1), codes)
+
+
+def test_sparse_compresses_well():
+    """ReLU-style sparsity: mostly zeros => far below the fixed-width size
+    (the paper reports 1/10-1/100 vs raw float features)."""
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 256, size=50_000)
+    codes[rng.random(50_000) < 0.9] = 0       # 90% zeros
+    nbytes = huffman_size_bytes(codes, 256)
+    assert nbytes < 50_000 * 1 * 0.3          # < 30% of uint8 fixed width
+    assert nbytes < 50_000 * 4 / 10           # < 1/10 of float32
+
+
+def test_huffman_close_to_entropy_bound():
+    rng = np.random.default_rng(1)
+    p = np.array([0.85] + [0.15 / 15] * 15)
+    codes = rng.choice(16, size=20_000, p=p)
+    h = entropy_bits_per_symbol(codes, 16)
+    actual = huffman_size_bytes(codes, 16)
+    lower = entropy_size_bytes(codes, 16)
+    # Shannon bound <= Huffman <= Shannon + 1 bit/symbol + table overhead.
+    assert lower <= actual + 1
+    assert actual <= (h + 1.0) * 20_000 / 8 + 1024
+
+
+def test_single_symbol_stream():
+    codes = np.zeros(1000, np.int64)
+    blob = huffman_encode(codes, 256)
+    back = huffman_decode(blob)
+    np.testing.assert_array_equal(back.reshape(-1), codes)
+    # 1 bit/symbol payload + the 256-entry code-length table header
+    assert len(blob) < 1000 // 8 + 300
+
+
+def test_size_helper_matches_encode():
+    rng = np.random.default_rng(2)
+    codes = rng.integers(0, 64, size=5000)
+    est = huffman_size_bytes(codes, 64)
+    real = len(huffman_encode(codes, 64))
+    assert abs(est - real) <= 64  # header bookkeeping slack

@@ -1,0 +1,69 @@
+"""Analytic FLOP/size accounting sanity (feeds the roofline compute term)
+and the CNN data-amplification measurement (paper Fig. 2)."""
+import numpy as np
+import pytest
+
+from repro.config import INPUT_SHAPES, get_config
+from repro.models.api import build_model
+from repro.models import cnn as cnn_lib
+
+
+def test_dense_train_flops_close_to_6nd():
+    model = build_model(get_config("yi-6b"))
+    shape = INPUT_SHAPES["train_4k"]
+    tokens = shape.global_batch * shape.seq_len
+    analytic = model.analytic_step_flops(shape)
+    six_nd = 6.0 * model.param_count() * tokens
+    # analytic includes attention quadratic + logits; 6ND includes embeds.
+    assert 0.8 * six_nd < analytic < 1.6 * six_nd
+
+
+def test_moe_flops_use_active_params():
+    model = build_model(get_config("llama4-maverick-400b-a17b"))
+    assert model.active_param_count() < 0.2 * model.param_count()
+    shape = INPUT_SHAPES["train_4k"]
+    analytic = model.analytic_step_flops(shape)
+    six_nd_total = 6.0 * model.param_count() * shape.global_batch * shape.seq_len
+    assert analytic < 0.5 * six_nd_total     # far below dense-equivalent
+
+
+def test_decode_flops_tiny_vs_prefill():
+    model = build_model(get_config("qwen3-8b"))
+    dec = model.analytic_step_flops(INPUT_SHAPES["decode_32k"])
+    pre = model.analytic_step_flops(INPUT_SHAPES["prefill_32k"])
+    assert dec < pre / 100
+
+
+def test_param_counts_in_expected_range():
+    expect = {
+        "yi-6b": (5e9, 7e9),
+        "qwen3-8b": (7e9, 9e9),
+        "olmo-1b": (1e9, 1.4e9),
+        "grok-1-314b": (290e9, 340e9),
+        "llama4-maverick-400b-a17b": (360e9, 430e9),
+        "zamba2-2.7b": (2.0e9, 3.0e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = build_model(get_config(arch)).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_cnn_data_amplification_fig2():
+    """Paper Fig. 2: early conv feature maps are larger than the input
+    (up to ~20x for ResNet), shrinking only in late stages."""
+    cfg = get_config("resnet50")
+    layers = cnn_lib.build_layers(cfg)
+    feat = cnn_lib.feature_bytes(layers, batch=1)
+    input_bytes = 3 * 224 * 224 * 4
+    amp = np.array(feat, float) / input_bytes
+    assert amp.max() > 2.0                     # amplification exists
+    assert amp[-1] < 0.2                       # final features are small
+    assert amp.argmax() < len(amp) // 2        # peak in the early layers
+
+
+def test_vgg_layer_fmacs_positive_monotone_cumsum():
+    cfg = get_config("vgg16")
+    layers = cnn_lib.build_layers(cfg)
+    fmacs = cnn_lib.layer_fmacs(layers)
+    assert all(f >= 0 for f in fmacs)
+    assert sum(fmacs) > 1e10        # VGG16 ~15.5 GFLOPs/sample (FMACs ~7.7e9)

@@ -1,0 +1,82 @@
+"""Pallas kernel validation: shape/dtype sweep, assert_allclose against the
+pure-jnp oracle in ref.py, in interpret mode (the kernels target TPU;
+interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.quantize import ops, ref
+
+SHAPES = [
+    (8,), (128,), (129,), (256, 128), (3, 5, 7), (1, 1), (300,),
+    (16, 16, 16), (1024, 128),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+BITS = [2, 4, 8]
+
+
+def _rand(shape, dtype, seed=0):
+    x = np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+    x[np.abs(x) < 0.3] = 0.0            # feature-map-like sparsity
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bits", BITS)
+def test_quantize_dequantize_matches_ref(shape, dtype, bits):
+    x = _rand(shape, dtype)
+    got = ops.quantize_dequantize_kernel(x, bits, interpret=True)
+    want = ref.quantize_dequantize_ref(x, bits)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("shape", [(256, 128), (64,), (3, 5, 7)])
+@pytest.mark.parametrize("bits", [8])
+def test_codes_match_ref_bitexact(shape, bits):
+    x = _rand(shape, jnp.float32, seed=2)
+    codes, mn, mx = ops.quantize_pack(x, bits, interpret=True)
+    want_codes, wmn, wmx = ref.quantize_ref(x, bits)
+    got = np.asarray(codes).reshape(-1)[: x.size]
+    np.testing.assert_array_equal(got, np.asarray(want_codes).reshape(-1))
+    np.testing.assert_allclose(float(mn), float(wmn), rtol=1e-6)
+    np.testing.assert_allclose(float(mx), float(wmx), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(512, 128), (64, 128)])
+def test_pack4_halves_bytes(shape):
+    x = _rand(shape, jnp.float32, seed=3)
+    packed, mn, mx = ops.quantize_pack(x, 4, interpret=True)
+    assert packed.dtype == jnp.uint8
+    assert packed.size * 2 >= x.size          # two codes per byte
+    assert packed.size <= x.size // 2 + ops.LANES * 256
+    back = ops.dequantize_unpack(packed, mn, mx, 4, tuple(x.shape),
+                                 interpret=True)
+    want = ref.quantize_dequantize_ref(x, 4)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_roundtrip_error_bound():
+    x = _rand((1024, 128), jnp.float32, seed=4)
+    for bits in (4, 8):
+        got = ops.quantize_dequantize_kernel(x, bits, interpret=True)
+        step = float(x.max() - x.min()) / ((1 << bits) - 1)
+        assert float(jnp.max(jnp.abs(got - x))) <= step / 2 + 1e-6
+
+
+def test_kernel_under_jit_grad_context():
+    """The kernel path must be usable inside larger jitted programs."""
+    x = _rand((256, 128), jnp.float32, seed=5)
+
+    @jax.jit
+    def f(x):
+        y = ops.quantize_dequantize_kernel(x, 8, interpret=True)
+        return (y * 2).sum()
+
+    assert np.isfinite(float(f(x)))

@@ -1,0 +1,99 @@
+"""Predictor tables A_i(c)/S_i(c) (Sec. III-C) and the FMAC latency model
+(Sec. III-D / IV-A)."""
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.config import CLOUD_1080TI, EDGE_TK1, EDGE_TX2, JaladConfig
+from repro.core.latency import JPEG_RATIO, PNG_RATIO, LatencyModel
+from repro.core.predictor import PredictorTables, build_tables
+from repro.data.synthetic import make_batch
+
+
+def _tables(arch="resnet50", bits=(2, 4, 8), n_batches=2, seed=0):
+    model, params = reduced_model(arch)
+    batches = [make_batch(model.cfg, 8, 24, seed=seed + i)
+               for i in range(n_batches)]
+    return model, params, build_tables(model, params, batches, list(bits))
+
+
+def test_tables_shapes_and_ranges():
+    model, _, t = _tables()
+    n = len(model.decoupling_points())
+    assert t.acc_drop.shape == (n, 3)
+    assert t.size_bytes.shape == (n, 3)
+    assert (t.acc_drop >= 0).all() and (t.acc_drop <= 1).all()
+    assert (t.size_bytes > 0).all()
+
+
+def test_size_monotone_in_bits():
+    """S_i(c) grows with c (more bits => bigger compressed payload)."""
+    _, _, t = _tables()
+    assert (np.diff(t.size_bytes, axis=1) >= -1e-6).all()
+
+
+def test_more_bits_not_less_accurate_at_tail():
+    _, _, t = _tables(bits=(2, 8))
+    # at the last decoupling point, 8-bit drop should be <= 2-bit drop
+    assert t.acc_drop[-1, 1] <= t.acc_drop[-1, 0] + 0.05
+
+
+def test_stability_across_epochs():
+    """Paper Fig. 5: tables from different data epochs overlap."""
+    _, _, t1 = _tables(seed=0)
+    _, _, t2 = _tables(seed=100)
+    rel = np.abs(t1.size_bytes - t2.size_bytes) / t1.size_bytes
+    assert float(np.median(rel)) < 0.15
+    assert float(np.max(np.abs(t1.acc_drop - t2.acc_drop))) <= 0.6
+
+
+def test_save_load_roundtrip(tmp_path):
+    _, _, t = _tables()
+    p = str(tmp_path / "tables.npz")
+    t.save(p)
+    t2 = PredictorTables.load(p)
+    np.testing.assert_array_equal(t.acc_drop, t2.acc_drop)
+    np.testing.assert_array_equal(t.size_bytes, t2.size_bytes)
+    assert t.points == t2.points
+
+
+# ---------------------------------------------------------------------- lat
+
+
+def _latency(n=10, edge=EDGE_TX2):
+    fmacs = np.linspace(1e9, 2e9, n)
+    return LatencyModel(fmacs, edge, CLOUD_1080TI, input_bytes=150_528.0)
+
+
+def test_edge_times_monotone_increasing():
+    lat = _latency()
+    te = lat.edge_times()
+    assert (np.diff(te) > 0).all()
+
+
+def test_cloud_times_monotone_decreasing():
+    lat = _latency()
+    tc = lat.cloud_times()
+    assert (np.diff(tc) < 0).all()
+    assert tc[-1] == 0.0          # cut at the last layer -> no cloud work
+
+
+def test_paper_device_constants():
+    assert CLOUD_1080TI.flops == 12e12 and CLOUD_1080TI.w == 2.1761
+    assert EDGE_TX2.flops == 2e12 and EDGE_TX2.w == 1.1176
+    assert EDGE_TK1.flops == 300e9
+
+
+def test_cloud_only_baselines_ordering():
+    """Origin2Cloud uploads more than PNG2Cloud than JPEG2Cloud."""
+    lat = _latency()
+    bw = 1e6
+    origin = lat.cloud_only_time(bw, image_ratio=1.0)
+    png = lat.cloud_only_time(bw, image_ratio=PNG_RATIO)
+    jpeg = lat.cloud_only_time(bw, image_ratio=JPEG_RATIO)
+    assert origin > png > jpeg
+
+
+def test_slow_edge_shifts_total_latency():
+    fast, slow = _latency(edge=EDGE_TX2), _latency(edge=EDGE_TK1)
+    assert (slow.edge_times() > fast.edge_times()).all()

@@ -1,0 +1,114 @@
+"""Unit + property tests for the paper's min-max step quantization
+(Sec. III-B) and the bit-packing wire format."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    dequantize,
+    pack_bits,
+    packed_size_bytes,
+    quantize,
+    quantize_dequantize,
+    unpack_bits,
+)
+
+arrays = st.integers(1, 4).flatmap(
+    lambda nd: st.tuples(
+        *[st.integers(1, 6) for _ in range(nd)]
+    )
+).flatmap(
+    lambda shape: st.builds(
+        lambda seed: np.random.default_rng(seed)
+        .standard_normal(shape)
+        .astype(np.float32),
+        st.integers(0, 2**31),
+    )
+)
+
+
+@given(arrays, st.sampled_from([2, 3, 4, 5, 6, 8]))
+@settings(max_examples=60, deadline=None)
+def test_roundtrip_error_bounded_by_half_step(x, bits):
+    """|x - dequant(quant(x))| <= step/2 everywhere (the defining property
+    of round-to-nearest affine quantization)."""
+    xj = jnp.asarray(x)
+    q = quantize(xj, bits)
+    xd = dequantize(q)
+    rng = float(x.max() - x.min())
+    step = rng / ((1 << bits) - 1) if rng > 0 else 0.0
+    err = np.abs(np.asarray(xd) - x).max()
+    assert err <= step / 2 + 1e-6
+
+
+@given(arrays)
+@settings(max_examples=30, deadline=None)
+def test_mse_shrinks_with_bits(x):
+    """More bits => (weakly) lower error, up to grid-alignment luck.
+
+    Strict pointwise monotonicity is NOT guaranteed for min-max
+    quantization (a value can land exactly on a coarse grid point), so the
+    property tested is the robust one: the worst-case bound step/2 shrinks
+    4x per 2 bits, and the 8-bit MSE never exceeds the 2-bit MSE."""
+    xj = jnp.asarray(x)
+    errs = {
+        bits: float(jnp.mean((quantize_dequantize(xj, bits) - xj) ** 2))
+        for bits in (2, 4, 6, 8)
+    }
+    assert errs[8] <= errs[2] + 1e-12
+    assert errs[6] <= errs[2] + 1e-12
+    # and each is within its analytic worst case
+    rng = float(x.max() - x.min())
+    for bits, e in errs.items():
+        step = rng / ((1 << bits) - 1) if rng > 0 else 0.0
+        assert e <= (step / 2) ** 2 + 1e-9
+
+
+def test_codes_within_range():
+    x = np.random.default_rng(1).standard_normal((16, 16)).astype(np.float32)
+    for bits in (1, 2, 4, 8, 12, 16):
+        q = quantize(jnp.asarray(x), bits)
+        assert int(q.values.min()) >= 0
+        assert int(q.values.max()) <= (1 << bits) - 1
+
+
+def test_constant_tensor():
+    x = jnp.full((8, 8), 3.25, jnp.float32)
+    q = quantize(x, 8)
+    xd = dequantize(q)
+    np.testing.assert_allclose(np.asarray(xd), 3.25, rtol=0, atol=0)
+
+
+def test_per_channel_not_worse_than_per_tensor():
+    """Beyond-paper per-channel stats: tighter ranges, lower error on
+    channel-scaled data."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 8, 32)).astype(np.float32)
+    x *= (10.0 ** np.arange(4))[:, None, None]   # wildly different scales
+    xj = jnp.asarray(x)
+    e_tensor = float(jnp.mean((quantize_dequantize(xj, 6) - xj) ** 2))
+    q = quantize(xj, 6, axis=0)
+    e_channel = float(jnp.mean((dequantize(q, axis=0) - xj) ** 2))
+    assert e_channel <= e_tensor
+
+
+@given(
+    st.integers(1, 500),
+    st.sampled_from([1, 2, 4, 8, 16]),
+    st.integers(0, 2**31),
+)
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << bits, size=n).astype(np.int32)
+    words = pack_bits(jnp.asarray(codes), bits)
+    back = unpack_bits(words, bits, n)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+    assert words.size * 4 + 8 == packed_size_bytes(n, bits)
+
+
+def test_packed_size_smaller_than_float():
+    n = 10_000
+    assert packed_size_bytes(n, 4) < n * 4 / 7   # ~8x smaller than f32
+    assert packed_size_bytes(n, 8) < n * 4 / 3.5

@@ -1,0 +1,111 @@
+"""Sharding resolver properties + structural coverage of every assigned
+(arch x shape) input tree. These tests run on 1 CPU device with synthetic
+Mesh objects (no jax device state needed beyond the default)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES, get_config
+from repro.config.registry import assigned_archs
+from repro.models.api import build_model
+from repro.sharding.rules import DEFAULT_RULES, resolve_spec
+
+
+def _fake_mesh(shape, names):
+    """Mesh over fake CPU ids: resolve_spec only reads shape/axis_names."""
+    dev = np.empty(shape, dtype=object)
+    it = np.nditer(dev, flags=["refs_ok", "multi_index"])
+    d = jax.devices()[0]
+    while not it.finished:
+        dev[it.multi_index] = d
+        it.iternext()
+    return Mesh(dev, names)
+
+
+MESH_1POD = _fake_mesh((16, 16), ("data", "model"))
+MESH_2POD = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _check_spec(shape, logical, mesh):
+    spec = resolve_spec(shape, logical, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = int(np.prod([sizes[a] for a in axes]))
+        assert shape[i] % prod == 0, (shape, spec)
+        used.extend(axes)
+    assert len(used) == len(set(used)), f"axis reused: {spec}"
+    return spec
+
+
+@given(
+    st.lists(st.sampled_from(
+        ["batch", "seq", "ffn", "heads", "kv_heads", "vocab", "embed",
+         "expert", "kv_seq", None]
+    ), min_size=1, max_size=4),
+    st.lists(st.sampled_from([1, 2, 3, 4, 8, 16, 17, 48, 128, 256, 50304]),
+             min_size=1, max_size=4),
+)
+@settings(max_examples=100, deadline=None)
+def test_resolver_never_overshards_or_reuses(logical, dims):
+    n = min(len(logical), len(dims))
+    _check_spec(tuple(dims[:n]), tuple(logical[:n]), MESH_1POD)
+    _check_spec(tuple(dims[:n]), tuple(logical[:n]), MESH_2POD)
+
+
+def test_batch_prefers_pod_data_on_multipod():
+    spec = resolve_spec((512, 128), ("batch", "seq"), MESH_2POD)
+    assert spec[0] == ("pod", "data")
+
+
+def test_undividable_falls_back():
+    # yi-6b KV heads: 4 % 16 != 0 -> unsharded
+    spec = resolve_spec((2, 128, 4, 128),
+                        ("batch", "kv_seq", "kv_heads", "head_dim"),
+                        MESH_1POD)
+    assert len(spec) < 3 or spec[2] is None
+    # grok experts: 8 % 16 != 0 -> expert dim unsharded, ffn picks it up
+    spec = resolve_spec((8, 6144, 32768), ("expert", "embed", "ffn"),
+                        MESH_1POD)
+    assert spec[0] is None if len(spec) > 0 else True
+    assert spec[2] in (("data", "model"),) if len(spec) == 3 else True
+
+
+@pytest.mark.parametrize("arch", assigned_archs())
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_batch_axes_tree_matches_input_specs(arch, shape_name):
+    """The logical-axis tree must cover the input tree exactly — every
+    array leaf has an axis tuple of matching rank (full 10 x 4 grid)."""
+    model = build_model(get_config(arch))
+    shape = INPUT_SHAPES[shape_name]
+    specs = model.input_specs(shape)
+    axes = model.batch_logical_axes(shape)
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    spec_leaves = jax.tree.leaves(specs)
+    axes_leaves = jax.tree.leaves(axes, is_leaf=is_axes)
+    assert len(spec_leaves) == len(axes_leaves)
+    for s, a in zip(spec_leaves, axes_leaves):
+        assert len(s.shape) == len(a), (arch, shape_name, s.shape, a)
+
+
+@pytest.mark.parametrize("arch", assigned_archs())
+def test_param_logical_axes_cover_every_param(arch):
+    model = build_model(get_config(arch))
+    specs = jax.tree.leaves(model.abstract_params())
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+    axes = jax.tree.leaves(model.param_logical_axes(), is_leaf=is_axes)
+    assert len(specs) == len(axes)
+    for s, a in zip(specs, axes):
+        assert len(s.shape) == len(a)
+        _check_spec(s.shape, a, MESH_1POD)
+        _check_spec(s.shape, a, MESH_2POD)
