@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Docs link check: every relative markdown link must resolve.
+
+Scans all *.md files in the repo for ``[text](target)`` links and fails
+if a relative target (file or file#anchor) does not exist on disk.
+External (http/https/mailto) links and pure #anchors are skipped — CI
+must not depend on the network.
+
+  python scripts/check_docs_links.py            # check repo root
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", "results", "__pycache__", ".github"}
+
+
+def iter_md_files(root: pathlib.Path):
+    for path in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def check(root: pathlib.Path) -> int:
+    bad = []
+    n_links = 0
+    for md in iter_md_files(root):
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            n_links += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                bad.append(f"{md.relative_to(root)}: broken link -> {target}")
+    for line in bad:
+        print(f"FAIL {line}")
+    print(f"checked {n_links} relative links in docs: "
+          f"{'OK' if not bad else f'{len(bad)} broken'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    root = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    sys.exit(check(root))

@@ -9,8 +9,9 @@ plan's predicted latency at the *current* bandwidth by ``switch_margin``.
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.core.decoupler import DecoupledPlan, JaladEngine
 
@@ -50,22 +51,49 @@ class AdaptationController:
     history: List[AdaptationEvent] = field(default_factory=list)
     _estimator: BandwidthEstimator = field(default_factory=BandwidthEstimator)
     _step: int = 0
+    # Re-decoupling listeners, called (outside the lock, on the replanning
+    # thread) with each AdaptationEvent as it is committed. The pipelined
+    # server uses this to register the new (point, bits) runner in its
+    # shared cache and to log plan switches against its simulated clock.
+    # The lock makes observe/replan safe when the link stage and the edge
+    # stage run on different threads.
+    _listeners: List[Callable[[AdaptationEvent], None]] = field(
+        default_factory=list
+    )
+    _lock: threading.RLock = field(default_factory=threading.RLock)
+
+    def add_listener(self, fn: Callable[[AdaptationEvent], None]) -> None:
+        self._listeners.append(fn)
+
+    def _commit(self, event: AdaptationEvent) -> None:
+        self.history.append(event)
+        self.plan = event.new_plan
 
     def observe_transfer(self, nbytes: float, seconds: float) -> float:
-        self.bw = self._estimator.observe(nbytes, seconds)
-        return self.bw
+        with self._lock:
+            self.bw = self._estimator.observe(nbytes, seconds)
+            return self.bw
 
     def current_plan(self, bandwidth: Optional[float] = None) -> DecoupledPlan:
         """Return the active plan, re-deciding if conditions warrant."""
+        with self._lock:
+            before = len(self.history)
+            plan = self._current_plan_locked(bandwidth)
+            fired = self.history[before:]
+        for event in fired:      # listeners run unlocked: they may be slow
+            for fn in self._listeners:
+                fn(event)
+        return plan
+
+    def _current_plan_locked(self, bandwidth: Optional[float]
+                             ) -> DecoupledPlan:
         self._step += 1
         bw = bandwidth if bandwidth is not None else self.bw
         if bw is None:
             bw = self.engine.cfg.bandwidth_bytes_per_s
         candidate = self.engine.decide(bw)
         if self.plan is None:
-            self.history.append(AdaptationEvent(self._step, bw, None,
-                                                candidate))
-            self.plan = candidate
+            self._commit(AdaptationEvent(self._step, bw, None, candidate))
             return self.plan
         if candidate.point == self.plan.point and \
                 candidate.bits == self.plan.bits:
@@ -73,9 +101,8 @@ class AdaptationController:
         # Predicted latency of keeping the old plan under the NEW bandwidth.
         old_cost = self._plan_cost(self.plan, bw)
         if candidate.predicted_latency < old_cost * (1 - self.switch_margin):
-            self.history.append(AdaptationEvent(self._step, bw, self.plan,
-                                                candidate))
-            self.plan = candidate
+            self._commit(AdaptationEvent(self._step, bw, self.plan,
+                                         candidate))
         return self.plan
 
     def _plan_cost(self, plan: DecoupledPlan, bandwidth: float) -> float:

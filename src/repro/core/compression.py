@@ -42,10 +42,17 @@ def compress(x, bits: int) -> CompressedFeatures:
 
 
 def decompress(c: CompressedFeatures, dtype=np.float32) -> np.ndarray:
-    codes = ent.huffman_decode(c.payload).reshape(c.shape)
+    codes = decompress_codes(c)
     levels = (1 << c.bits) - 1
     step = (c.x_max - c.x_min) / levels if levels else 0.0
     return (codes.astype(np.float32) * step + c.x_min).astype(dtype)
+
+
+def decompress_codes(c: CompressedFeatures) -> np.ndarray:
+    """Huffman-decode only; returns the integer codes (the dequant + cast
+    half of the codec runs as one fused Pallas launch on the cloud device —
+    see ``repro.kernels.quantize.dequantize_codes``)."""
+    return ent.huffman_decode(c.payload).reshape(c.shape)
 
 
 def transfer_size_bytes(x, bits: int) -> int:

@@ -1,7 +1,19 @@
+"""Pallas boundary-feature codec kernels.
+
+Tiling scheme, SMEM scalar layout, the ``interpret=True`` CPU validation
+story, and the fused dequant kernels are documented in ``docs/kernels.md``
+(repo root). ``ref.py`` is the pure-jnp oracle every kernel must match.
+"""
 from repro.kernels.quantize.ops import (
     quantize_pack,
     dequantize_unpack,
+    dequantize_codes,
     quantize_dequantize_kernel,
 )
 
-__all__ = ["quantize_pack", "dequantize_unpack", "quantize_dequantize_kernel"]
+__all__ = [
+    "quantize_pack",
+    "dequantize_unpack",
+    "dequantize_codes",
+    "quantize_dequantize_kernel",
+]

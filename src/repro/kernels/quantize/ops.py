@@ -75,17 +75,45 @@ def dequantize_unpack(
     interpret: bool | None = None,
     out_dtype=jnp.float32,
 ):
-    """Inverse of quantize_pack; ``shape`` is the original tensor shape."""
+    """Inverse of quantize_pack; ``shape`` is the original tensor shape.
+
+    One fused ``pallas_call``: int4 nibble unpack (when bits<=4), the
+    affine dequant, and the cast to ``out_dtype`` all happen in-kernel.
+    """
     if interpret is None:
         interpret = _should_interpret()
-    if bits <= 4:
-        u = codes2d
-        lo = (u & 0x0F).astype(jnp.uint8)
-        hi = (u >> 4).astype(jnp.uint8)
-        codes2d = jnp.stack([lo, hi], axis=-1).reshape(u.shape[0], -1)
     bm = min(block_m, codes2d.shape[0])
-    x2d = k.dequantize_blocks(codes2d, mn, mx, bits, bm, out_dtype,
-                              interpret=interpret)
+    x2d = k.fused_dequant_blocks(codes2d, mn, mx, bits, bm, out_dtype,
+                                 packed=bits <= 4, interpret=interpret)
+    n_elem = int(np.prod(shape))
+    return x2d.reshape(-1)[:n_elem].reshape(shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "shape", "block_m", "interpret", "out_dtype"),
+)
+def dequantize_codes(
+    codes: jnp.ndarray,
+    mn,
+    mx,
+    bits: int,
+    shape: Tuple[int, ...],
+    block_m: int = k.DEFAULT_BLOCK_M,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+):
+    """Cloud-side boundary codec: unpacked uint8 codes (any shape, e.g.
+    straight from the Huffman decoder) -> dequantized ``out_dtype`` tensor
+    of ``shape`` in a single fused dequant+cast ``pallas_call``."""
+    if interpret is None:
+        interpret = _should_interpret()
+    q2d, _ = _to_tiles(codes.astype(jnp.uint8), block_m)
+    bm = min(block_m, q2d.shape[0])
+    x2d = k.fused_dequant_blocks(
+        q2d, jnp.asarray(mn, jnp.float32), jnp.asarray(mx, jnp.float32),
+        bits, bm, out_dtype, packed=False, interpret=interpret,
+    )
     n_elem = int(np.prod(shape))
     return x2d.reshape(-1)[:n_elem].reshape(shape)
 

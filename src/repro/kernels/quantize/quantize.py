@@ -9,13 +9,19 @@ packing. On TPU we implement it as
   2. ``quantize_kernel``  — fused affine-map + round + clip to uint8 codes,
                             with the (min, max) scalars in SMEM,
   3. ``pack4_kernel``     — two int4 codes per uint8 along the lane axis,
-  4. ``dequantize_kernel``— codes -> float, same tiling.
+  4. ``dequant_cast_kernel``   — fused codes -> float -> target dtype
+     (the cloud-side boundary codec: one launch instead of dequantize +
+     separate cast pass),
+  5. ``unpack4_dequant_kernel``— fused nibble unpack + dequant + cast for
+     the int4 wire format (one launch instead of unpack / dequant / cast).
 
 Tiles are (block_m, 128)-shaped: the trailing 128 matches the VPU lane
 width; block_m is a multiple of 8 (f32 sublane) chosen so a tile fits
 comfortably in VMEM. On this CPU-only container the kernels are validated
 with ``interpret=True`` against ``ref.py``; on real TPUs the same
 ``pl.pallas_call`` lowers to Mosaic.
+
+See ``docs/kernels.md`` for the tiling scheme and validation story.
 """
 from __future__ import annotations
 
@@ -125,37 +131,58 @@ def pack4_blocks(q2d: jnp.ndarray, block_m: int, *, interpret: bool
 
 
 # ---------------------------------------------------------------------------
-# Dequantize
+# Fused cloud-side codec: (unpack) + dequantize + cast in one launch
 # ---------------------------------------------------------------------------
 
 
-def _dequantize_kernel(mn_ref, step_ref, q_ref, out_ref):
+def _dequant_cast_kernel(mn_ref, step_ref, q_ref, out_ref):
     mn = mn_ref[0]
     step = step_ref[0]
     q = q_ref[...].astype(jnp.float32)
-    out_ref[...] = q * step + mn
+    out_ref[...] = (q * step + mn).astype(out_ref.dtype)
 
 
-def dequantize_blocks(q2d: jnp.ndarray, mn, mx, bits: int, block_m: int,
-                      out_dtype, *, interpret: bool) -> jnp.ndarray:
+def _unpack4_dequant_kernel(mn_ref, step_ref, p_ref, out_ref):
+    mn = mn_ref[0]
+    step = step_ref[0]
+    p = p_ref[...]
+    lo = (p & 0x0F).astype(jnp.float32)
+    hi = (p >> 4).astype(jnp.float32)
+    # Interleave the two nibble streams back to lane order [lo0, hi0, ...]
+    # (the inverse of pack4's even/odd split).
+    m, half = p.shape
+    codes = jnp.stack([lo, hi], axis=-1).reshape(m, half * 2)
+    out_ref[...] = (codes * step + mn).astype(out_ref.dtype)
+
+
+def fused_dequant_blocks(q2d: jnp.ndarray, mn, mx, bits: int, block_m: int,
+                         out_dtype, *, packed: bool, interpret: bool
+                         ) -> jnp.ndarray:
+    """One ``pallas_call`` for the whole cloud-side boundary codec.
+
+    ``packed=False``: q2d holds one uint8 code per element.
+    ``packed=True``:  q2d holds two int4 codes per byte (pack4 layout); the
+    output has twice as many lanes as the input.
+    """
     m, n = q2d.shape
     levels = float((1 << bits) - 1)
     step = jnp.where(levels > 0, (mx - mn) / levels, 0.0).astype(jnp.float32)
+    out_n = n * 2 if packed else n
     grid = (m // block_m,)
-    out = pl.pallas_call(
-        _dequantize_kernel,
+    kernel = _unpack4_dequant_kernel if packed else _dequant_cast_kernel
+    return pl.pallas_call(
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec((block_m, n), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_specs=pl.BlockSpec((block_m, out_n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, out_n), jnp.dtype(out_dtype)),
         interpret=interpret,
     )(
         jnp.reshape(mn.astype(jnp.float32), (1,)),
         jnp.reshape(step, (1,)),
         q2d,
     )
-    return out.astype(out_dtype)

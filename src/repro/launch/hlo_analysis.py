@@ -204,10 +204,20 @@ class RooflineReport:
         }
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a dict on jax>=0.4.30-ish and a
+    one-element list of dicts on earlier/other versions. Normalize to the
+    dict (empty if XLA produced no analysis)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
                      chips: int, model_flops_global: float,
                      analytic_flops_global: float = 0.0) -> RooflineReport:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     coll = parse_collectives(compiled.as_text())
     return RooflineReport(

@@ -1,10 +1,26 @@
 from repro.serving.engine import ServeSession, Request, RequestScheduler
-from repro.serving.edge_cloud import EdgeCloudServer, LatencyBreakdown
+from repro.serving.scheduler import ContinuousBatchingEngine, GenRequest
+from repro.serving.edge_cloud import (
+    EdgeCloudServer,
+    LatencyBreakdown,
+    RunnerCache,
+)
+from repro.serving.pipeline import (
+    PipelinedEdgeCloudServer,
+    PipelineRequest,
+    StageTimeline,
+)
 
 __all__ = [
     "ServeSession",
     "Request",
     "RequestScheduler",
+    "ContinuousBatchingEngine",
+    "GenRequest",
     "EdgeCloudServer",
     "LatencyBreakdown",
+    "RunnerCache",
+    "PipelinedEdgeCloudServer",
+    "PipelineRequest",
+    "StageTimeline",
 ]

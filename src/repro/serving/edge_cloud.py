@@ -41,28 +41,59 @@ class LatencyBreakdown:
 
 
 @dataclass
+class RunnerCache:
+    """(point, bits) -> DecoupledRunner, shared by the synchronous and the
+    pipelined servers. Thread-safe: the pipelined server warms it from an
+    adaptation listener while the edge stage reads it."""
+
+    engine: JaladEngine
+    params: Any
+    _cache: Dict[Tuple[int, int], DecoupledRunner] = field(
+        default_factory=dict
+    )
+    _lock: Any = None
+
+    def __post_init__(self):
+        import threading
+
+        self._lock = threading.Lock()
+
+    def get(self, plan: DecoupledPlan) -> DecoupledRunner:
+        key = (plan.point, plan.bits)
+        with self._lock:
+            runner = self._cache.get(key)
+        if runner is None:
+            # Build outside the lock: a miss (e.g. the adaptation listener
+            # pre-registering a new plan) must not stall hits from the
+            # other pipeline stages.
+            runner = self.engine.make_runner(self.params, plan)
+            with self._lock:
+                runner = self._cache.setdefault(key, runner)
+        return runner
+
+
+@dataclass
 class EdgeCloudServer:
-    """Serves batches through the current JALAD decoupling."""
+    """Serves batches through the current JALAD decoupling, one request at
+    a time (edge, transfer and cloud strictly in sequence). The pipelined
+    variant that overlaps the three stages lives in
+    ``repro.serving.pipeline``."""
 
     engine: JaladEngine
     params: Any
     controller: AdaptationController = None
     clock: float = 0.0
     log: List[LatencyBreakdown] = field(default_factory=list)
-    _runner_cache: Dict[Tuple[int, int], DecoupledRunner] = field(
-        default_factory=dict
-    )
+    runners: RunnerCache = None
 
     def __post_init__(self):
         if self.controller is None:
             self.controller = AdaptationController(self.engine)
+        if self.runners is None:
+            self.runners = RunnerCache(self.engine, self.params)
 
     def _runner(self, plan: DecoupledPlan) -> DecoupledRunner:
-        key = (plan.point, plan.bits)
-        if key not in self._runner_cache:
-            self._runner_cache[key] = self.engine.make_runner(self.params,
-                                                              plan)
-        return self._runner_cache[key]
+        return self.runners.get(plan)
 
     def serve_batch(self, batch, bandwidth: float) -> Tuple[Any, LatencyBreakdown]:
         """Run one batch at the given true bandwidth; returns (logits,

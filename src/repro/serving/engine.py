@@ -72,30 +72,52 @@ class Request:
 
 @dataclass
 class RequestScheduler:
-    """Batches requests up to ``max_batch`` (padding prompts to a common
-    length) and runs them through a ServeSession."""
+    """Back-compat facade over the continuous-batching engine.
+
+    The old implementation padded a wave of prompts to a common length and
+    ran them in lock-step (so every request waited for the longest one,
+    and left-padding perturbed RoPE positions). ``submit``/``step`` now
+    feed :class:`repro.serving.scheduler.ContinuousBatchingEngine`, whose
+    per-slot decode is numerically identical to serving each request
+    alone. Prefer using the engine directly for new code."""
 
     session: ServeSession
     queue: List[Request] = field(default_factory=list)
     completed: List[Request] = field(default_factory=list)
 
+    def __post_init__(self):
+        from repro.serving.scheduler import ContinuousBatchingEngine
+
+        self._engine = ContinuousBatchingEngine(
+            self.session.model, self.session.params, self.session.cfg
+        )
+
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
     def step(self) -> List[Request]:
+        """Drain everything currently queued; returns the finished
+        requests in completion order."""
+        from repro.serving.scheduler import GenRequest
+
         if not self.queue:
             return []
-        batch_reqs = self.queue[: self.session.cfg.max_batch]
-        self.queue = self.queue[len(batch_reqs):]
-        max_prompt = max(len(r.tokens) for r in batch_reqs)
-        toks = np.zeros((len(batch_reqs), max_prompt), np.int32)
-        for i, r in enumerate(batch_reqs):
-            toks[i, -len(r.tokens):] = r.tokens     # left-pad
-        max_new = max(r.max_new_tokens for r in batch_reqs)
-        out = self.session.generate({"tokens": jnp.asarray(toks)}, max_new)
+        by_uid: Dict[int, Request] = {}
+        for r in self.queue:
+            by_uid[r.uid] = r
+            self._engine.submit(GenRequest(
+                uid=r.uid, tokens=np.asarray(r.tokens, np.int32),
+                max_new_tokens=r.max_new_tokens,
+            ))
+        self.queue = []
+        done = []
+        already = len(self._engine.completed)
+        finished = self._engine.run()[already:]
         now = time.time()
-        for i, r in enumerate(batch_reqs):
-            r.result = out[i, : r.max_new_tokens]
+        for g in finished:
+            r = by_uid[g.uid]
+            r.result = g.result
             r.done_at = now
             self.completed.append(r)
-        return batch_reqs
+            done.append(r)
+        return done

@@ -1,0 +1,271 @@
+"""Pipelined edge-cloud serving (the paper's Fig. 1 deployment, overlapped).
+
+The synchronous :class:`repro.serving.edge_cloud.EdgeCloudServer` runs
+``edge -> transfer -> cloud`` strictly in sequence, so each device idles
+two thirds of the time. This module overlaps the three stages: while the
+cloud half computes request *k*, the link carries request *k+1*'s boundary
+features and the edge half computes request *k+2* — the classic 3-stage
+software pipeline, which is what makes Neurosurgeon-style decoupling pay
+off at serving throughput.
+
+Execution model
+---------------
+Three worker threads (edge, link, cloud) joined by FIFO queues run the
+*real numerics* (head forward, Huffman codec, fused Pallas dequant, tail
+forward) with genuine host-side overlap. Wall-clock *accounting* uses the
+paper's FMAC latency model on a simulated clock: each stage keeps a
+``busy_until`` timestamp and a request occupies a stage for its modeled
+duration, giving the standard pipeline recurrence
+
+    edge_end[i]  = max(arrival[i],  edge_end[i-1])  + T_E(plan_i)
+    xfer_end[i]  = max(edge_end[i], xfer_end[i-1])  + bytes_i / BW_i
+    cloud_end[i] = max(xfer_end[i], cloud_end[i-1]) + T_C(plan_i)
+
+so results are device-independent and exactly reproducible.
+
+Adaptation happens **live**: the edge stage asks the shared
+:class:`AdaptationController` for the current plan using the controller's
+own bandwidth estimate (fed by the link stage's observed transfers, EWMA),
+and a re-decoupling listener pre-builds the new runner off the critical
+path. A bandwidth step-change therefore moves the cut within a few
+requests, while requests already in flight complete under their old plan
+— the edge and cloud halves never disagree about a given request.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.adaptation import AdaptationController, AdaptationEvent
+from repro.core.decoupler import DecoupledPlan, JaladEngine
+from repro.core.latency import PNG_RATIO
+from repro.serving.edge_cloud import RunnerCache
+
+_SHUTDOWN = object()
+
+
+@dataclass
+class StageTimeline:
+    """Simulated-clock occupancy of one request across the three stages."""
+
+    arrival_s: float = 0.0
+    edge_start: float = 0.0
+    edge_end: float = 0.0
+    xfer_start: float = 0.0
+    xfer_end: float = 0.0
+    cloud_start: float = 0.0
+    cloud_end: float = 0.0
+    bytes_sent: int = 0
+    plan_point: int = -1
+    plan_bits: int = 0
+
+    @property
+    def latency_s(self) -> float:
+        """Request latency including pipeline queueing."""
+        return self.cloud_end - self.arrival_s
+
+    @property
+    def service_s(self) -> float:
+        """Pure service time (what the synchronous server would charge)."""
+        return (
+            (self.edge_end - self.edge_start)
+            + (self.xfer_end - self.xfer_start)
+            + (self.cloud_end - self.cloud_start)
+        )
+
+
+@dataclass
+class PipelineRequest:
+    uid: int
+    batch: Any
+    bandwidth: float                 # true link bandwidth for this transfer
+    arrival_s: float = 0.0
+    # Filled by the pipeline:
+    logits: Any = None
+    plan: Optional[DecoupledPlan] = None
+    timeline: StageTimeline = field(default_factory=StageTimeline)
+    # In-flight payload between stages:
+    _blob: Any = None
+    _extras: Any = None
+
+
+@dataclass
+class PipelinedEdgeCloudServer:
+    """3-stage asynchronous edge-cloud pipeline over one JaladEngine."""
+
+    engine: JaladEngine
+    params: Any
+    controller: Optional[AdaptationController] = None
+    runners: Optional[RunnerCache] = None
+    adaptation_log: List[Tuple[float, AdaptationEvent]] = field(
+        default_factory=list
+    )
+    completed: List[PipelineRequest] = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.controller is None:
+            self.controller = AdaptationController(self.engine)
+        if self.runners is None:
+            self.runners = RunnerCache(self.engine, self.params)
+        self._edge_q: "queue.Queue" = queue.Queue()
+        self._link_q: "queue.Queue" = queue.Queue()
+        self._cloud_q: "queue.Queue" = queue.Queue()
+        self._edge_free = 0.0          # simulated busy_until per stage
+        self._link_free = 0.0
+        self._cloud_free = 0.0
+        self._full_forward = None      # jitted whole model (cloud-only plan)
+        self._stage_error: Optional[BaseException] = None
+        self._window: List[PipelineRequest] = []   # latest serve() stream
+        # Re-decoupling hook: register the incoming plan's runner in the
+        # shared cache (jit compilation itself stays lazy) and timestamp
+        # the switch on the simulated clock.
+        self.controller.add_listener(self._on_replan)
+
+    # -------------------------------------------------------------- hooks
+    def _on_replan(self, event: AdaptationEvent) -> None:
+        self.adaptation_log.append((self._edge_free, event))
+        if not event.new_plan.is_cloud_only:
+            self.runners.get(event.new_plan)
+
+    def _run_stage(self, worker, out_q: Optional["queue.Queue"]) -> None:
+        """Run one stage loop; on a worker exception, record it and push
+        _SHUTDOWN downstream so the pipeline drains instead of deadlocking
+        (serve() re-raises the recorded error)."""
+        try:
+            worker()
+        except BaseException as e:   # noqa: BLE001 — re-raised in serve()
+            if self._stage_error is None:
+                self._stage_error = e
+            if out_q is not None:
+                out_q.put(_SHUTDOWN)
+
+    # ------------------------------------------------------------- stages
+    def _edge_worker(self) -> None:
+        lat = self.engine.latency
+        while True:
+            req = self._edge_q.get()
+            if req is _SHUTDOWN:
+                self._link_q.put(_SHUTDOWN)
+                return
+            plan = self.controller.current_plan()
+            req.plan = plan
+            tl = req.timeline
+            tl.arrival_s = req.arrival_s
+            if plan.is_cloud_only:
+                edge_t = 0.0           # raw input ships straight to the link
+                req._blob = None
+            else:
+                runner = self.runners.get(plan)
+                req._blob, req._extras = runner.edge_step(req.batch)
+                edge_t = float(lat.edge_times()[plan.point])
+            tl.edge_start = max(req.arrival_s, self._edge_free)
+            tl.edge_end = tl.edge_start + edge_t
+            self._edge_free = tl.edge_end
+            self._link_q.put(req)
+
+    def _link_worker(self) -> None:
+        lat = self.engine.latency
+        while True:
+            req = self._link_q.get()
+            if req is _SHUTDOWN:
+                self._cloud_q.put(_SHUTDOWN)
+                return
+            tl = req.timeline
+            if req.plan.is_cloud_only:
+                nbytes = int(lat.input_bytes * PNG_RATIO)
+            else:
+                nbytes = req._blob.nbytes
+            transfer_t = nbytes / req.bandwidth
+            tl.xfer_start = max(tl.edge_end, self._link_free)
+            tl.xfer_end = tl.xfer_start + transfer_t
+            self._link_free = tl.xfer_end
+            tl.bytes_sent = nbytes
+            # Live bandwidth estimate for the adaptation controller.
+            self.controller.observe_transfer(max(nbytes, 1),
+                                             max(transfer_t, 1e-9))
+            self._cloud_q.put(req)
+
+    def _cloud_worker(self) -> None:
+        lat = self.engine.latency
+        while True:
+            req = self._cloud_q.get()
+            if req is _SHUTDOWN:
+                return
+            plan = req.plan
+            tl = req.timeline
+            if plan.is_cloud_only:
+                if self._full_forward is None:
+                    import jax
+
+                    self._full_forward = jax.jit(self.engine.model.forward)
+                req.logits = self._full_forward(self.params, req.batch)
+                cloud_t = lat.cloud.exec_time(
+                    float(np.sum(lat.fmacs_per_point))
+                )
+            else:
+                runner = self.runners.get(plan)
+                req.logits = runner.cloud_step(req._blob, req._extras)
+                cloud_t = float(lat.cloud_times()[plan.point])
+            tl.cloud_start = max(tl.xfer_end, self._cloud_free)
+            tl.cloud_end = tl.cloud_start + cloud_t
+            self._cloud_free = tl.cloud_end
+            tl.plan_point = plan.point
+            tl.plan_bits = plan.bits
+            req._blob = req._extras = None
+            self.completed.append(req)
+
+    # -------------------------------------------------------------- public
+    def serve(self, requests: Iterable[PipelineRequest],
+              timeout_s: float = 600.0) -> List[PipelineRequest]:
+        """Run a request stream through the pipeline; blocks until every
+        request has drained and returns them in completion order."""
+        threads = [
+            threading.Thread(target=self._run_stage, args=(w, out_q),
+                             daemon=True, name=n)
+            for w, n, out_q in [
+                (self._edge_worker, "jalad-edge", self._link_q),
+                (self._link_worker, "jalad-link", self._cloud_q),
+                (self._cloud_worker, "jalad-cloud", None),
+            ]
+        ]
+        for t in threads:
+            t.start()
+        n0 = len(self.completed)
+        reqs = list(requests)
+        for req in reqs:
+            self._edge_q.put(req)
+        self._edge_q.put(_SHUTDOWN)
+        for t in threads:
+            t.join(timeout=timeout_s)
+            if t.is_alive():
+                raise TimeoutError(f"pipeline stage {t.name} did not drain")
+        if self._stage_error is not None:
+            err, self._stage_error = self._stage_error, None
+            raise err
+        self._window = self.completed[n0:]
+        return self._window
+
+    # ----------------------------------------------------------- reporting
+    # Both metrics cover the most recent serve() stream (not the lifetime
+    # completed list), so pipelined-vs-synchronous ratios stay meaningful
+    # on a server reused across serve() calls.
+    @property
+    def makespan_s(self) -> float:
+        """Simulated wall-clock from first arrival to last cloud finish of
+        the latest serve() stream."""
+        window = self._window
+        if not window:
+            return 0.0
+        start = min(r.timeline.arrival_s for r in window)
+        return max(r.timeline.cloud_end for r in window) - start
+
+    def synchronous_time_s(self) -> float:
+        """What the latest serve() stream costs without overlap: each
+        request occupies edge, link and cloud back-to-back (the
+        EdgeCloudServer accounting), so total = sum of per-request service
+        times."""
+        return sum(r.timeline.service_s for r in self._window)

@@ -1,0 +1,195 @@
+"""Continuous-batching request scheduler (slot-based, vLLM-style).
+
+Replaces the one-shot ``ServeSession.generate`` serving path: instead of
+padding a wave of requests to a common prompt length and running them in
+lock-step, the engine keeps ``max_batch`` independent *slots*. A request
+joins a free slot at any decode step (its prompt is prefilled into that
+slot's cache), every active slot advances one token per engine step
+through a single batched decode, and a slot is evicted the moment its
+request finishes (max tokens or EOS) — so short requests never wait for
+long ones and the batch refills continuously.
+
+Per-slot decode positions are handled by ``jax.vmap``-ing the model's
+single-sequence ``decode_step`` over a leading slot axis: every slot
+carries its own ``pos`` scalar and its own cache tree (batch=1), so the
+numerics of each request are *exactly* those of running it alone — the
+continuous-batching output is bit-identical to the synchronous batch-1
+path (greedy), which the tests assert.
+
+Compile behaviour: the batched decode compiles once (fixed slot count and
+cache length). Prefill compiles per distinct prompt length, as in
+``ServeSession``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.types import ServeConfig
+from repro.models.api import Model
+
+
+@dataclass
+class GenRequest:
+    """One generation request and (after serving) its result."""
+
+    uid: int
+    tokens: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    arrival: float = 0.0               # engine step at which it may join
+    # Filled by the engine:
+    out_tokens: List[int] = field(default_factory=list)
+    joined_step: int = -1
+    done_step: int = -1
+    slot: int = -1
+
+    @property
+    def result(self) -> np.ndarray:
+        return np.asarray(self.out_tokens, np.int32)
+
+
+@dataclass
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching over a shared batched decode."""
+
+    model: Model
+    params: Any
+    cfg: ServeConfig
+
+    def __post_init__(self):
+        if self.model.cfg.family == "cnn":
+            raise ValueError("continuous batching serves autoregressive "
+                             "families; CNNs go through the edge-cloud "
+                             "pipeline (repro.serving.pipeline)")
+        n = self.cfg.max_batch
+        L = self.cfg.max_seq_len
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, L)
+        )
+        self._decode = jax.jit(
+            jax.vmap(self.model.decode_step, in_axes=(None, 0, 0, 0))
+        )
+        one = self.model.init_caches(1, L, 0)
+        self._caches = jax.tree.map(
+            lambda a: jnp.zeros((n,) + a.shape, a.dtype), one
+        )
+        self._pos = jnp.zeros((n,), jnp.int32)
+        self._last = jnp.zeros((n, 1, 1), jnp.int32)
+        self._slots: List[Optional[GenRequest]] = [None] * n
+        self._keys = [None] * n                     # per-request PRNG state
+        self.queue: Deque[GenRequest] = deque()
+        self.completed: List[GenRequest] = []
+        self.events: List[Tuple[str, int, int]] = []   # (kind, step, uid)
+        self.step_count = 0
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: GenRequest) -> None:
+        self.queue.append(req)
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    # ------------------------------------------------------------- internals
+    def _join(self, slot: int, req: GenRequest) -> None:
+        batch = {"tokens": jnp.asarray(req.tokens[None, :], jnp.int32)}
+        logits, caches = self._prefill(self.params, batch)
+        self._caches = jax.tree.map(
+            lambda buf, new: buf.at[slot].set(new), self._caches, caches
+        )
+        self._pos = self._pos.at[slot].set(len(req.tokens))
+        req.slot = slot
+        req.joined_step = self.step_count
+        self._slots[slot] = req
+        self._keys[slot] = jax.random.key(self.cfg.seed + req.uid)
+        self.events.append(("join", self.step_count, req.uid))
+        first = self._select_token(slot, logits[:, -1])
+        self._last = self._last.at[slot, 0, 0].set(first)
+        self._record_token(slot, first)
+
+    def _select_token(self, slot: int, logits_row: jnp.ndarray) -> int:
+        req = self._slots[slot]
+        if req.temperature > 0:
+            self._keys[slot], sub = jax.random.split(self._keys[slot])
+            return int(jax.random.categorical(
+                sub, logits_row[0] / req.temperature
+            ))
+        return int(jnp.argmax(logits_row[0]))
+
+    def _record_token(self, slot: int, token: int) -> None:
+        req = self._slots[slot]
+        req.out_tokens.append(token)
+        finished = len(req.out_tokens) >= req.max_new_tokens or (
+            req.eos_id is not None and token == req.eos_id
+        )
+        if finished:
+            self._evict(slot)
+
+    def _evict(self, slot: int) -> None:
+        req = self._slots[slot]
+        req.done_step = self.step_count
+        self._slots[slot] = None
+        self._keys[slot] = None
+        self.completed.append(req)
+        self.events.append(("evict", self.step_count, req.uid))
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> List[GenRequest]:
+        """One engine step: admit eligible requests into free slots, then
+        advance every active slot by one decode token. Returns the requests
+        that finished during this step."""
+        self.step_count += 1
+        done_before = len(self.completed)
+
+        free = self._free_slots()
+        deferred: List[GenRequest] = []
+        while free and self.queue:
+            req = self.queue.popleft()
+            if req.arrival > self.step_count - 1:
+                deferred.append(req)
+                continue
+            self._join(free.pop(0), req)
+        self.queue.extendleft(reversed(deferred))
+
+        active = [i for i, r in enumerate(self._slots) if r is not None]
+        if active:
+            logits, new_caches = self._decode(
+                self.params, self._last, self._pos, self._caches
+            )
+            # Only active slots advance; free slots keep their (ignored)
+            # state until a join overwrites it.
+            mask = np.zeros((self.cfg.max_batch,), bool)
+            mask[active] = True
+            mj = jnp.asarray(mask)
+            self._caches = jax.tree.map(
+                lambda old, new: jnp.where(
+                    mj.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+                ),
+                self._caches, new_caches,
+            )
+            self._pos = jnp.where(mj, self._pos + 1, self._pos)
+            for slot in active:
+                tok = self._select_token(slot, logits[slot, :, -1])
+                self._last = self._last.at[slot, 0, 0].set(tok)
+                self._record_token(slot, tok)
+        return self.completed[done_before:]
+
+    def run(self) -> List[GenRequest]:
+        """Drain the queue and all active slots; returns completions in
+        finish order."""
+        while self.queue or self.num_active:
+            before = self.step_count
+            self.step()
+            if self.step_count == before:   # pragma: no cover — safety
+                break
+        return self.completed

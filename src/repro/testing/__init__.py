@@ -1,0 +1,10 @@
+"""Test-support utilities that ship with the library.
+
+``hypothesis_stub`` is a deterministic, dependency-free subset of the
+hypothesis API. ``tests/conftest.py`` installs it into ``sys.modules``
+only when the real package is absent, so the property-test suite runs in
+hermetic containers without ``pip install hypothesis``.
+"""
+from repro.testing import hypothesis_stub
+
+__all__ = ["hypothesis_stub"]

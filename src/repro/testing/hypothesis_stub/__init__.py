@@ -1,0 +1,123 @@
+"""Deterministic stand-in for the subset of ``hypothesis`` this repo uses.
+
+The real hypothesis shrinks failures and drives coverage-guided search;
+this stub only replays a fixed, seed-derived example stream. That is
+enough for the repo's property tests, which all take (seed, small ints,
+sampled enums) and build their own data with ``np.random.default_rng``.
+
+Draws are derived from ``crc32(test_name) ^ example_index`` so every run
+of every machine sees the same examples — failures reproduce exactly.
+
+Installed by ``tests/conftest.py`` via::
+
+    sys.modules["hypothesis"] = repro.testing.hypothesis_stub
+    sys.modules["hypothesis.strategies"] = ...hypothesis_stub.strategies
+
+only when ``import hypothesis`` fails.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+from repro.testing.hypothesis_stub import strategies
+
+__all__ = ["given", "settings", "assume", "example", "strategies",
+           "HealthCheck", "UnsatisfiedAssumption"]
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by ``assume(False)``; the example is silently skipped."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Accepted and ignored (API compatibility)."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    all = classmethod(lambda cls: [])
+
+
+def settings(*args, **kwargs):
+    """Records ``max_examples``; every other knob is accepted and ignored."""
+    max_examples = kwargs.get("max_examples", DEFAULT_MAX_EXAMPLES)
+
+    def apply(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+
+    if args and callable(args[0]):       # bare @settings
+        return apply(args[0])
+    return apply
+
+
+def example(*args, **kwargs):
+    """Prepends an explicit example to the stream."""
+
+    def apply(fn):
+        fn._stub_examples = getattr(fn, "_stub_examples", []) + [(args, kwargs)]
+        return fn
+
+    return apply
+
+
+def given(*strats, **kw_strats):
+    if kw_strats:
+        raise NotImplementedError("stub @given supports positional "
+                                  "strategies only")
+
+    def decorate(fn):
+        cfg = getattr(fn, "_stub_settings", {"max_examples":
+                                             DEFAULT_MAX_EXAMPLES})
+        explicit = getattr(fn, "_stub_examples", [])
+
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            base = zlib.crc32(fn.__qualname__.encode())
+            for ex_args, ex_kwargs in explicit:
+                fn(*fixture_args, *ex_args, **fixture_kwargs, **ex_kwargs)
+            drawn = 0
+            attempts = 0
+            while drawn < cfg["max_examples"]:
+                attempts += 1
+                if attempts > cfg["max_examples"] * 20:
+                    raise RuntimeError(
+                        f"{fn.__qualname__}: assume() rejected too many "
+                        f"examples ({attempts} attempts)"
+                    )
+                rnd = random.Random((base << 20) ^ attempts)
+                values = [s.example(rnd) for s in strats]
+                try:
+                    fn(*fixture_args, *values, **fixture_kwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (stub hypothesis, attempt "
+                        f"{attempts}): {fn.__qualname__}{tuple(values)!r}"
+                    ) from e
+                drawn += 1
+
+        # pytest must see only the fixture params: strategies fill the
+        # rightmost len(strats) arguments, fixtures (if any) the rest.
+        params = list(inspect.signature(fn).parameters.values())
+        fixture_params = params[: len(params) - len(strats)]
+        wrapper.__signature__ = inspect.Signature(fixture_params)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        # pytest plugins (anyio) introspect ``fn.hypothesis.inner_test``.
+        wrapper.hypothesis = type("_Hyp", (), {"inner_test": staticmethod(fn)})
+        return wrapper
+
+    return decorate

@@ -1,0 +1,105 @@
+"""Strategy objects for the hypothesis stub (see package docstring).
+
+Each strategy implements ``example(rnd: random.Random)``; combinators
+(``map``/``flatmap``/``filter``) compose exactly like the real library.
+Only the strategies the test-suite uses are implemented — extend here if
+a new test needs more.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Sequence
+
+__all__ = ["SearchStrategy", "integers", "floats", "booleans", "just",
+           "none", "sampled_from", "lists", "tuples", "builds", "one_of"]
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rnd: random.Random) -> Any:
+        return self._draw(rnd)
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rnd: f(self._draw(rnd)))
+
+    def flatmap(self, f: Callable[[Any], "SearchStrategy"]
+                ) -> "SearchStrategy":
+        return SearchStrategy(lambda rnd: f(self._draw(rnd)).example(rnd))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rnd: random.Random):
+            for _ in range(1000):
+                v = self._draw(rnd)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter() rejected 1000 consecutive draws")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    lo, hi = int(min_value), int(max_value)
+    # Bias toward the boundaries the way hypothesis does: edge cases find
+    # off-by-one bugs that uniform draws miss.
+    edges = [lo, hi, lo + 1 if lo + 1 <= hi else hi]
+
+    def draw(rnd: random.Random) -> int:
+        if rnd.random() < 0.15:
+            return rnd.choice(edges)
+        return rnd.randint(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+    return SearchStrategy(lambda rnd: rnd.uniform(lo, hi))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: value)
+
+
+def none() -> SearchStrategy:
+    return just(None)
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elems = list(elements)
+    return SearchStrategy(lambda rnd: rnd.choice(elems))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10, **_ignored) -> SearchStrategy:
+    def draw(rnd: random.Random):
+        n = rnd.randint(min_size, max_size)
+        return [elements.example(rnd) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rnd: tuple(s.example(rnd) for s in strats)
+    )
+
+
+def builds(target: Callable, *strats: SearchStrategy,
+           **kw_strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rnd: target(
+            *[s.example(rnd) for s in strats],
+            **{k: s.example(rnd) for k, s in kw_strats.items()},
+        )
+    )
+
+
+def one_of(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.choice(strats).example(rnd))

@@ -1,5 +1,15 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
 the real (single-CPU) device; only repro.launch.dryrun fakes 512 devices."""
+import sys
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when installed)
+except ModuleNotFoundError:
+    from repro.testing import hypothesis_stub
+
+    sys.modules["hypothesis"] = hypothesis_stub
+    sys.modules["hypothesis.strategies"] = hypothesis_stub.strategies
+
 import jax
 import numpy as np
 import pytest
