@@ -1,0 +1,85 @@
+"""Boundary-codec comparison: edge-encode / cloud-decode latency and wire
+bytes for every registered codec at several bit widths.
+
+The claim checked by assertion (so ``benchmarks.run`` fails loudly if it
+regresses): the ``bitpack`` codec's *device-side* edge encode (one jitted
+fused Pallas quantize+pack launch + host framing) is faster than the
+``huffman`` codec's host path (quantize + pure-Python/numpy Huffman) at
+equal bit width — the encode half of the codec no longer scales with the
+host's entropy coder. Huffman keeps the smallest wire; the ILP trades
+those two against the link bandwidth.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, save_result
+from repro.codec import get_codec, list_codecs
+
+SHAPE_QUICK = (8, 32, 28, 28)        # ~200k elements, NCHW feature map
+SHAPE_FULL = (16, 64, 56, 56)        # ~3.2M elements
+BITS = (2, 4, 8)
+REPEATS = 3
+
+
+def _features(shape, seed=0):
+    x = np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+    x[np.abs(x) < 0.8] = 0.0          # post-ReLU-like sparsity
+    return jnp.asarray(x)
+
+
+def _best_of(fn, repeats=REPEATS):
+    best = np.inf
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(quick: bool = True) -> Dict:
+    shape = SHAPE_QUICK if quick else SHAPE_FULL
+    x = _features(shape)
+    rows = []
+    results: Dict = {"shape": list(shape), "codecs": {}}
+    encode_ms: Dict = {}
+    for bits in BITS:
+        for name in list_codecs():
+            codec = get_codec(name)
+            codec.encode(x, bits)            # warm up (jit compile)
+            t_enc, blob = _best_of(lambda: codec.encode(x, bits))
+            out = codec.decode(blob)
+            out.block_until_ready()          # warm up decode
+            t_dec, _ = _best_of(
+                lambda: codec.decode(blob).block_until_ready()
+            )
+            encode_ms[(name, bits)] = t_enc * 1e3
+            results["codecs"].setdefault(name, []).append({
+                "bits": bits,
+                "encode_ms": t_enc * 1e3,
+                "decode_ms": t_dec * 1e3,
+                "wire_bytes": blob.nbytes,
+            })
+            rows.append([
+                f"c={bits}", name, f"{t_enc * 1e3:.2f}ms",
+                f"{t_dec * 1e3:.2f}ms", f"{blob.nbytes:,}B",
+                f"{x.size * 4 / blob.nbytes:.1f}x",
+            ])
+    print(f"\nBoundary codecs on {shape} float32 "
+          f"({x.size * 4 / 1e6:.1f} MB raw)")
+    print(fmt_table(rows, ["bits", "codec", "edge encode", "cloud decode",
+                           "wire", "vs f32"]))
+    for bits in BITS:
+        assert encode_ms[("bitpack", bits)] < encode_ms[("huffman", bits)], (
+            f"device-side bitpack encode ({encode_ms[('bitpack', bits)]:.2f}"
+            f"ms) must beat host Huffman ({encode_ms[('huffman', bits)]:.2f}"
+            f"ms) at c={bits}"
+        )
+    path = save_result("codec", results)
+    print(f"wrote {path}")
+    return results

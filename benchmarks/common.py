@@ -86,6 +86,7 @@ def cnn_setup(arch: str, quick: bool = True, seed: int = 0):
     tables = PredictorTables(
         points=tables.points,
         bits_choices=tables.bits_choices,
+        codecs=tables.codecs,
         acc_drop=tables.acc_drop,
         size_bytes=tables.size_bytes * scale,
         base_accuracy=tables.base_accuracy,

@@ -20,7 +20,7 @@ def run(quick: bool = True) -> dict:
            "compressed": {}}
     rows = []
     for ci, bits in enumerate(tables.bits_choices):
-        comp_bytes = tables.size_bytes[:, ci]
+        comp_bytes = tables.sizes()[:, ci]
         ratio = raw / np.maximum(comp_bytes, 1)
         out["compressed"][str(bits)] = comp_bytes.tolist()
         rows.append([f"c={bits}", f"{ratio.min():.1f}x", f"{ratio.mean():.1f}x",
@@ -29,7 +29,7 @@ def run(quick: bool = True) -> dict:
     print(fmt_table(rows, ["bits", "min", "mean", "max"]))
     # Paper: compression reduces feature maps to 1/10 - 1/100 of original.
     best = max(
-        float((raw / np.maximum(tables.size_bytes[:, ci], 1)).max())
+        float((raw / np.maximum(tables.sizes()[:, ci], 1)).max())
         for ci in range(len(tables.bits_choices))
     )
     assert best >= 10.0, f"expected >=10x somewhere, best {best:.1f}x"

@@ -46,7 +46,7 @@ def run(quick: bool = True) -> dict:
     n = len(model.decoupling_points())
     tables = build_tables(model, params, eval_batches, bits,
                           points=[n // 2])
-    drops = tables.acc_drop[0]
+    drops = tables.drops()[0]
     out = {
         "base_accuracy": tables.base_accuracy,
         "bits": bits,

@@ -24,8 +24,8 @@ def run(quick: bool = True) -> dict:
         batches = [make_batch(cfg, bsz, 0, seed=1000 * e + i)
                    for i in range(1 if quick else 3)]
         tabs.append(build_tables(model, params, batches, bits))
-    sizes = np.stack([t.size_bytes[:, 0] for t in tabs])   # (E, N)
-    accs = np.stack([t.acc_drop[:, 0] for t in tabs])
+    sizes = np.stack([t.sizes()[:, 0] for t in tabs])   # (E, N)
+    accs = np.stack([t.drops()[:, 0] for t in tabs])
     size_rel_spread = (sizes.max(0) - sizes.min(0)) / sizes.mean(0)
     acc_spread = accs.max(0) - accs.min(0)
     out = {

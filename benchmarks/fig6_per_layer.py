@@ -14,7 +14,7 @@ def run(quick: bool = True) -> dict:
     for arch in ("vgg16", "resnet50"):
         model, params, tables, _, points = cnn_setup(arch, quick)
         ci = tables.bits_choices.index(8)
-        drops = tables.acc_drop[:, ci]
+        drops = tables.drops()[:, ci]
         out[arch] = {
             "points": tables.points,
             "acc_drop_c8": drops.tolist(),

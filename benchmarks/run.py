@@ -23,6 +23,7 @@ MODULES = [
     "fig8_bandwidth",
     "table3_edge_power",
     "ilp_solve_time",
+    "codec",
     "pipeline_serving",
     "roofline",
 ]

@@ -1,0 +1,35 @@
+"""Pluggable boundary codecs: the wire formats that carry quantized
+boundary features across the edge-cloud link.
+
+Importing this package registers the built-in codecs:
+
+* ``huffman``    — the paper's codec: per-tensor quantize + host Huffman.
+* ``bitpack``    — device-side fused Pallas quantize+pack, no entropy
+                   stage; host does bitstream framing only.
+* ``perchannel`` — per-channel ranges (vector header) + true c-bit
+                   packing.
+
+See ``docs/codecs.md`` for the wire formats and the edge/host/cloud
+placement of each stage.
+"""
+from repro.codec.base import (
+    BoundaryCodec,
+    WireBlob,
+    get_codec,
+    list_codecs,
+    register_codec,
+)
+from repro.codec.huffman import HuffmanCodec
+from repro.codec.bitpack import BitpackCodec
+from repro.codec.perchannel import PerChannelCodec
+
+__all__ = [
+    "BoundaryCodec",
+    "WireBlob",
+    "get_codec",
+    "list_codecs",
+    "register_codec",
+    "HuffmanCodec",
+    "BitpackCodec",
+    "PerChannelCodec",
+]

@@ -1,0 +1,134 @@
+"""The boundary-codec interface: how quantized features cross the link.
+
+JALAD's in-layer compression (paper Sec. III-B) is one point in a family
+of wire formats; Auto-Split (arXiv:2108.13041) and Edgent (arXiv:1806.07840)
+both let the split decision range over the *compression scheme*, not just
+the cut point and bit width. This module makes the codec a first-class,
+swappable component:
+
+* :class:`WireBlob` — the codec-agnostic unit that crosses the edge-cloud
+  link: an opaque payload plus the header every codec needs (shape, bit
+  width, per-tensor or per-channel affine ranges).
+* :class:`BoundaryCodec` — ``encode``/``decode``/``wire_size_bytes`` with
+  hooks for calibration (``simulate`` — the dequantized values the cloud
+  will see — and ``transfer_size_bytes`` — the exact data-dependent wire
+  size the S_i(c) predictor records).
+* a registry (``register_codec``/``get_codec``/``list_codecs``) the ILP
+  enumerates over, so ``JaladEngine.decide`` can pick (point, bits, codec)
+  jointly.
+
+Concrete codecs live in sibling modules: ``huffman`` (the paper's
+host-side entropy coder), ``bitpack`` (device-side fused Pallas
+quantize+pack, no entropy stage) and ``perchannel`` (vector range
+headers + true c-bit packing).
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize_dequantize
+
+
+@dataclass(frozen=True)
+class WireBlob:
+    """One boundary tensor on the wire.
+
+    ``payload`` is the codec-specific bitstream. The header fields are what
+    *every* codec must ship alongside it: the tensor shape and bit width
+    (negotiated per plan, 1 byte on the wire), and the affine ranges —
+    scalars for per-tensor codecs, ``(C,)`` vectors for per-channel ones
+    (8 bytes per entry). The codec id itself is part of the decoupling
+    plan, agreed by edge and cloud at re-decoupling time, so it costs no
+    per-request bytes.
+    """
+
+    codec: str                      # registry id (out-of-band, not counted)
+    payload: bytes
+    shape: Tuple[int, ...]
+    bits: int
+    x_min: np.ndarray               # () or (C,) float32
+    x_max: np.ndarray
+    axis: Optional[int] = None      # channel axis for vector ranges
+
+    @property
+    def num_elements(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def header_bytes(self) -> int:
+        # (min, max) pairs as f32 + the bits byte.
+        return 8 * int(np.size(self.x_min)) + 1
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload) + self.header_bytes
+
+
+class BoundaryCodec(ABC):
+    """One wire format for the edge->cloud boundary tensor.
+
+    ``value_key`` names the codec's *value transform* — the equivalence
+    class of dequantized values the cloud reconstructs. Codecs with the
+    same key (e.g. huffman and bitpack, both per-tensor min-max) decode to
+    identical tensors, so the accuracy calibration shares one tail forward
+    between them.
+    """
+
+    name: str = ""
+    value_key: str = "tensor"
+
+    @abstractmethod
+    def encode(self, x: jnp.ndarray, bits: int) -> WireBlob:
+        """Quantize + serialize one boundary tensor (runs on the edge)."""
+
+    @abstractmethod
+    def decode(self, blob: WireBlob, out_dtype=jnp.float32) -> jnp.ndarray:
+        """Reconstruct the dequantized tensor (runs on the cloud)."""
+
+    @abstractmethod
+    def wire_size_bytes(self, shape: Tuple[int, ...], bits: int) -> int:
+        """Shape-only wire size: exact for fixed-rate codecs, an upper
+        bound for entropy-coded ones."""
+
+    # ------------------------------------------------------------ hooks
+    def transfer_size_bytes(self, x: jnp.ndarray, bits: int) -> int:
+        """Exact data-dependent wire size (what S_i(c) records). Fixed-rate
+        codecs need only the shape; entropy coders override this."""
+        return self.wire_size_bytes(tuple(x.shape), bits)
+
+    def simulate(self, x: jnp.ndarray, bits: int) -> jnp.ndarray:
+        """The dequantized values the cloud will reconstruct, in-graph
+        (used by accuracy calibration and ``run_simulated``)."""
+        return quantize_dequantize(x, bits)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, BoundaryCodec] = {}
+
+
+def register_codec(codec: BoundaryCodec) -> BoundaryCodec:
+    if not codec.name:
+        raise ValueError("codec must set a non-empty .name")
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> BoundaryCodec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown boundary codec {name!r}; registered: {list_codecs()}"
+        ) from None
+
+
+def list_codecs() -> List[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,74 @@
+"""The paper's boundary codec: per-tensor min-max quantize + canonical
+Huffman entropy coding (Sec. III-B).
+
+Edge side: quantize (jnp) then Huffman-encode on the host CPU — exactly
+what the paper's edge device runs. Cloud side: Huffman-decode on the host,
+then one fused Pallas dequant+cast launch (``dequantize_codes``). Codes
+wider than 8 bits travel as uint16 through the same fused kernel — no
+float fallback.
+
+The payload is byte-identical to the pre-refactor
+``repro.core.compression.compress`` wire format (pinned by
+``tests/test_codec.py``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.codec.base import BoundaryCodec, WireBlob, register_codec
+from repro.core import entropy as ent
+from repro.core import quantization as q
+
+
+class HuffmanCodec(BoundaryCodec):
+    name = "huffman"
+    value_key = "tensor"
+
+    def encode(self, x: jnp.ndarray, bits: int) -> WireBlob:
+        shape = tuple(x.shape)
+        if x.size == 0:
+            return WireBlob(self.name, b"", shape, bits,
+                            np.float32(0.0), np.float32(0.0))
+        quantized = q.quantize(jnp.asarray(x), bits)
+        codes = np.asarray(quantized.values)
+        payload = ent.huffman_encode(codes, 1 << bits)
+        return WireBlob(
+            self.name, payload, shape, bits,
+            np.float32(quantized.x_min), np.float32(quantized.x_max),
+        )
+
+    def decode(self, blob: WireBlob, out_dtype=jnp.float32) -> jnp.ndarray:
+        if blob.num_elements == 0:
+            return jnp.zeros(blob.shape, out_dtype)
+        from repro.kernels.quantize import dequantize_codes
+
+        # dequantize_codes narrows to the kernel's code dtype (uint8, or
+        # uint16 for bits > 8) internally.
+        codes = ent.huffman_decode(blob.payload)
+        return dequantize_codes(
+            jnp.asarray(codes.reshape(blob.shape)),
+            blob.x_min, blob.x_max, blob.bits, blob.shape,
+            out_dtype=out_dtype,
+        )
+
+    def wire_size_bytes(self, shape: Tuple[int, ...], bits: int) -> int:
+        """Upper bound: Huffman is an optimal prefix code, so its payload
+        never exceeds the fixed-width encoding (``bits`` per symbol) plus
+        the code-length table header."""
+        n = int(np.prod(shape)) if shape else 1
+        table = 6 + (1 << bits)
+        return table + (n * bits + 7) // 8 + 9
+
+    def transfer_size_bytes(self, x: jnp.ndarray, bits: int) -> int:
+        """Exact post-Huffman size without building the bitstream."""
+        if x.size == 0:
+            return 9
+        quantized = q.quantize(jnp.asarray(x), bits)
+        codes = np.asarray(quantized.values)
+        return ent.huffman_size_bytes(codes, 1 << bits) + 9
+
+
+register_codec(HuffmanCodec())

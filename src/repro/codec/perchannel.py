@@ -1,0 +1,82 @@
+"""Per-channel boundary codec: vector range headers + true c-bit packing.
+
+The ``axis=`` variant of ``repro.core.quantization.quantize`` (tighter
+per-channel min/max ranges -> lower error at the same bit width) existed
+but never had a wire format — nothing could actually ship it. This codec
+gives it one: codes are packed to exactly ``bits`` bits each (``32 //
+bits`` per uint32 word via ``pack_bits``), and the header carries one
+(min, max) float32 pair per channel instead of one per tensor, which the
+ILP sees as ``8 * C`` extra header bytes traded against the accuracy gain.
+
+Channel axis convention: dim 1 for 4-D tensors (this repo's CNN layout is
+NCHW) and the trailing dim otherwise (transformer ``(B, S, D)`` /
+``(B, D)`` boundaries).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.codec.base import BoundaryCodec, WireBlob, register_codec
+from repro.core import quantization as q
+
+
+def channel_axis(ndim: int) -> int:
+    return 1 if ndim == 4 else max(ndim - 1, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "shape", "axis", "out_dtype")
+)
+def _unpack_dequant(words, mn, mx, bits, shape, axis, out_dtype):
+    n = int(np.prod(shape))
+    codes = q.unpack_bits(words, bits, n).reshape(shape)
+    return q.dequantize(q.Quantized(codes, mn, mx, bits), out_dtype, axis)
+
+
+class PerChannelCodec(BoundaryCodec):
+    name = "perchannel"
+    value_key = "channel"
+
+    def encode(self, x: jnp.ndarray, bits: int) -> WireBlob:
+        shape = tuple(x.shape)
+        ax = channel_axis(len(shape))
+        if x.size == 0:
+            c = shape[ax] if shape else 1
+            zeros = np.zeros((c,), np.float32)
+            return WireBlob(self.name, b"", shape, bits, zeros, zeros,
+                            axis=ax)
+        quantized = q.quantize(jnp.asarray(x), bits, axis=ax)
+        words = q.pack_bits(quantized.values, bits)
+        return WireBlob(
+            self.name, np.asarray(words).astype("<u4").tobytes(), shape,
+            bits, np.asarray(quantized.x_min, np.float32),
+            np.asarray(quantized.x_max, np.float32), axis=ax,
+        )
+
+    def decode(self, blob: WireBlob, out_dtype=jnp.float32) -> jnp.ndarray:
+        if blob.num_elements == 0:
+            return jnp.zeros(blob.shape, out_dtype)
+        words = jnp.asarray(np.frombuffer(blob.payload, "<u4")
+                            .astype(np.uint32))
+        return _unpack_dequant(
+            words, jnp.asarray(blob.x_min), jnp.asarray(blob.x_max),
+            blob.bits, blob.shape, blob.axis, jnp.dtype(out_dtype),
+        )
+
+    def wire_size_bytes(self, shape: Tuple[int, ...], bits: int) -> int:
+        n = int(np.prod(shape)) if shape else 1
+        c = shape[channel_axis(len(shape))] if shape else 1
+        per_word = 32 // bits
+        words = (n + per_word - 1) // per_word
+        return words * 4 + 8 * c + 1
+
+    def simulate(self, x: jnp.ndarray, bits: int) -> jnp.ndarray:
+        return q.quantize_dequantize(x, bits, axis=channel_axis(x.ndim))
+
+
+register_codec(PerChannelCodec())

@@ -262,6 +262,10 @@ class JaladConfig:
     """Configuration of the decoupling decision problem."""
 
     bits_choices: Tuple[int, ...] = (2, 3, 4, 5, 6, 8, 16)
+    # Boundary codecs the ILP may choose between (registry ids from
+    # ``repro.codec``). The decision variable is the full (point, bits,
+    # codec) triple — the wire format is part of the split decision.
+    codec_choices: Tuple[str, ...] = ("huffman", "bitpack", "perchannel")
     accuracy_drop_budget: float = 0.10       # Δα
     bandwidth_bytes_per_s: float = 1e6       # BW (1 MB/s default, paper)
     edge: DeviceProfile = EDGE_TX2

@@ -96,7 +96,8 @@ class AdaptationController:
             self._commit(AdaptationEvent(self._step, bw, None, candidate))
             return self.plan
         if candidate.point == self.plan.point and \
-                candidate.bits == self.plan.bits:
+                candidate.bits == self.plan.bits and \
+                candidate.codec == self.plan.codec:
             return self.plan
         # Predicted latency of keeping the old plan under the NEW bandwidth.
         old_cost = self._plan_cost(self.plan, bw)
@@ -112,8 +113,9 @@ class AdaptationController:
         rows = eng.point_indices or list(range(len(eng.tables.points)))
         row = rows.index(plan.point)
         c = eng.tables.bits_choices.index(plan.bits)
+        k = eng.tables.codec_index(plan.codec)
         return (
             eng.latency.edge_times()[plan.point]
-            + eng.tables.size_bytes[row, c] / bandwidth
+            + eng.tables.size_bytes[row, c, k] / bandwidth
             + eng.latency.cloud_times()[plan.point]
         )

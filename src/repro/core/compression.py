@@ -1,8 +1,12 @@
-"""End-to-end feature-map compression: quantize -> (bitpack) -> Huffman.
+"""Legacy quantize -> Huffman glue (DEPRECATED shim).
 
-``compress``/``decompress`` produce the actual bytes that cross the
-edge-cloud link in the serving runtime; ``transfer_size_bytes`` is what the
-S_i(c) predictor records.
+The boundary-codec subsystem now lives in :mod:`repro.codec` — a
+``BoundaryCodec`` registry with ``huffman``/``bitpack``/``perchannel``
+implementations and the codec-agnostic :class:`repro.codec.WireBlob` wire
+unit. This module keeps the original single-codec API alive for existing
+callers; ``compress`` delegates to the registered ``huffman`` codec (the
+payload is byte-identical to the historical format) and ``decompress`` is
+the pure host-side reference decoder.
 """
 from __future__ import annotations
 
@@ -13,7 +17,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import entropy as ent
-from repro.core import quantization as q
+
+# NB: ``repro.codec`` is imported lazily inside the functions below — the
+# codec package itself depends on ``repro.core.quantization``, and eager
+# importing here would cycle when ``repro.codec`` is imported first.
 
 
 @dataclass(frozen=True)
@@ -32,16 +39,16 @@ class CompressedFeatures:
 
 def compress(x, bits: int) -> CompressedFeatures:
     """Quantize a float feature map and Huffman-code it (host-side)."""
-    quantized = q.quantize(jnp.asarray(x), bits)
-    codes = np.asarray(quantized.values)
-    payload = ent.huffman_encode(codes, 1 << bits)
+    from repro.codec import get_codec
+
+    blob = get_codec("huffman").encode(jnp.asarray(x), bits)
     return CompressedFeatures(
-        payload, tuple(x.shape), float(quantized.x_min),
-        float(quantized.x_max), bits,
+        blob.payload, blob.shape, float(blob.x_min), float(blob.x_max), bits,
     )
 
 
 def decompress(c: CompressedFeatures, dtype=np.float32) -> np.ndarray:
+    """Pure host-side reference decode (numpy; no kernel launch)."""
     codes = decompress_codes(c)
     levels = (1 << c.bits) - 1
     step = (c.x_max - c.x_min) / levels if levels else 0.0
@@ -52,12 +59,14 @@ def decompress_codes(c: CompressedFeatures) -> np.ndarray:
     """Huffman-decode only; returns the integer codes (the dequant + cast
     half of the codec runs as one fused Pallas launch on the cloud device —
     see ``repro.kernels.quantize.dequantize_codes``)."""
+    if not c.payload:       # zero-element boundary: empty payload, no header
+        return np.zeros(c.shape, np.int64)
     return ent.huffman_decode(c.payload).reshape(c.shape)
 
 
 def transfer_size_bytes(x, bits: int) -> int:
     """Exact post-Huffman transfer size of a feature map at c bits (without
     building the bitstream)."""
-    quantized = q.quantize(jnp.asarray(x), bits)
-    codes = np.asarray(quantized.values)
-    return ent.huffman_size_bytes(codes, 1 << bits) + 9
+    from repro.codec import get_codec
+
+    return get_codec("huffman").transfer_size_bytes(jnp.asarray(x), bits)

@@ -6,14 +6,18 @@ into the paper's decision procedure.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+if TYPE_CHECKING:
+    # Runtime import would cycle: the codec package depends on
+    # repro.core.quantization. get_codec is imported lazily where needed.
+    from repro.codec import BoundaryCodec, WireBlob
+
 from repro.config.types import JaladConfig
-from repro.core import compression as comp
 from repro.core.ilp import ILPProblem, ILPSolution, solve
 from repro.core.latency import LatencyModel
 from repro.core.predictor import PredictorTables
@@ -23,13 +27,15 @@ from repro.models.api import Model
 
 @dataclass
 class DecoupledPlan:
-    """The outcome of one ILP solve: where to cut and at what bit width."""
+    """The outcome of one ILP solve: where to cut, at what bit width, and
+    through which boundary codec."""
 
     point: int
     bits: int
     predicted_latency: float
     predicted_acc_drop: float
     solve_ms: float
+    codec: str = "huffman"
 
     @property
     def is_cloud_only(self) -> bool:
@@ -39,37 +45,34 @@ class DecoupledPlan:
 @dataclass
 class DecoupledRunner:
     """Executable split model. ``edge_step`` runs on the edge device and
-    returns the compressed boundary; ``cloud_step`` finishes the inference.
-    ``run`` wires them together (with exact compressed-size accounting)."""
+    returns the encoded boundary; ``cloud_step`` finishes the inference.
+    Both delegate the wire format entirely to the plan's
+    :class:`BoundaryCodec` — the runner knows nothing about bit widths,
+    entropy stages or code dtypes. ``run`` wires them together (with exact
+    wire-size accounting)."""
 
     model: Model
     params: Any
     plan: DecoupledPlan
 
     def __post_init__(self):
+        from repro.codec import get_codec
+
         self._head = jax.jit(self.model.run_head, static_argnums=2)
         self._tail = jax.jit(self.model.run_tail, static_argnums=2)
+        self._codec: "BoundaryCodec" = get_codec(self.plan.codec)
 
-    def edge_step(self, batch) -> Tuple[comp.CompressedFeatures, Any]:
+    def edge_step(self, batch) -> Tuple["WireBlob", Any]:
         out = self._head(self.params, batch, self.plan.point)
         boundary, extras = out if isinstance(out, tuple) else (out, None)
-        blob = comp.compress(np.asarray(boundary), self.plan.bits)
+        blob = self._codec.encode(boundary, self.plan.bits)
         return blob, extras
 
-    def cloud_step(self, blob: comp.CompressedFeatures, extras=None):
-        dtype = jnp.dtype(self.model.cfg.dtype)
-        if blob.bits <= 8:
-            # Huffman-decode on the host, then one fused Pallas launch for
-            # unquantize + cast (the cloud-side boundary codec).
-            from repro.kernels.quantize import dequantize_codes
+    def cloud_step(self, blob: "WireBlob", extras=None):
+        from repro.codec import get_codec
 
-            codes = comp.decompress_codes(blob)
-            boundary = dequantize_codes(
-                jnp.asarray(codes, jnp.uint8), blob.x_min, blob.x_max,
-                blob.bits, blob.shape, out_dtype=dtype,
-            )
-        else:   # >8-bit codes don't fit the uint8 kernel wire format
-            boundary = jnp.asarray(comp.decompress(blob)).astype(dtype)
+        dtype = jnp.dtype(self.model.cfg.dtype)
+        boundary = get_codec(blob.codec).decode(blob, out_dtype=dtype)
         if extras is not None:
             return self._tail(self.params, boundary, self.plan.point, extras)
         return self._tail(self.params, boundary, self.plan.point)
@@ -81,11 +84,12 @@ class DecoupledRunner:
         return logits, blob.nbytes
 
     def run_simulated(self, batch):
-        """jit-friendly end-to-end path: quantize-dequantize in-graph (no
-        host Huffman round trip). Numerically identical boundary values."""
+        """jit-friendly end-to-end path: the codec's value transform
+        in-graph (no host serialization round trip). Numerically identical
+        boundary values."""
         out = self._head(self.params, batch, self.plan.point)
         boundary, extras = out if isinstance(out, tuple) else (out, None)
-        xq = quantize_dequantize(boundary, self.plan.bits)
+        xq = self._codec.simulate(boundary, self.plan.bits)
         xq = xq.astype(jnp.dtype(self.model.cfg.dtype))
         if extras is not None:
             return self._tail(self.params, xq, self.plan.point, extras)
@@ -125,14 +129,19 @@ class JaladEngine:
     point_indices: Optional[List[int]] = None   # tables row -> model point
 
     def ilp_problem(self, bandwidth: float) -> ILPProblem:
+        """Build the selection problem over the joint choice axis: the
+        (C, K) bits x codec grid flattens to one column per (c, k) pair,
+        so the ILP picks the wire format along with the cut (Auto-Split
+        style: the compression scheme is a decision variable)."""
         te = self.latency.edge_times()
         tc = self.latency.cloud_times()
         rows = self.point_indices or list(range(len(self.tables.points)))
         te = te[rows]
         tc = tc[rows]
-        ttrans = self.tables.size_bytes / float(bandwidth)
+        n = self.tables.size_bytes.shape[0]
+        ttrans = self.tables.size_bytes.reshape(n, -1) / float(bandwidth)
         cost = te[:, None] + tc[:, None] + ttrans
-        return ILPProblem(cost, self.tables.acc_drop,
+        return ILPProblem(cost, self.tables.acc_drop.reshape(n, -1),
                           self.cfg.accuracy_drop_budget)
 
     def decide(self, bandwidth: Optional[float] = None,
@@ -147,14 +156,16 @@ class JaladEngine:
             return DecoupledPlan(-1, 0,
                                  self.latency.cloud_only_time(bw), 0.0, 0.0)
         rows = self.point_indices or list(range(len(self.tables.points)))
+        ci, ki = divmod(sol.bits_index, len(self.tables.codecs))
         return DecoupledPlan(
             point=rows[sol.point],
-            bits=self.tables.bits_choices[sol.bits_index],
+            bits=self.tables.bits_choices[ci],
             predicted_latency=sol.objective,
             predicted_acc_drop=float(
-                self.tables.acc_drop[sol.point, sol.bits_index]
+                self.tables.acc_drop[sol.point, ci, ki]
             ),
             solve_ms=sol.solve_ms,
+            codec=self.tables.codecs[ki],
         )
 
     def make_runner(self, params, plan: DecoupledPlan) -> DecoupledRunner:

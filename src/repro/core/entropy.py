@@ -73,7 +73,12 @@ def huffman_encode(codes_arr: np.ndarray, num_symbols: int) -> bytes:
     """Encode int array (values in [0, num_symbols)) to bytes.
 
     Layout: [u32 n][u16 num_symbols][u8 lengths per symbol][bitstream].
+    A zero in the num_symbols field means 65536 (the 16-bit alphabet —
+    zero is unreachable otherwise, so the format stays byte-identical for
+    every alphabet that fits a u16).
     """
+    if not (1 <= num_symbols <= 1 << 16):
+        raise ValueError(f"num_symbols must be in [1, 65536], got {num_symbols}")
     flat = np.asarray(codes_arr, np.int64).reshape(-1)
     freqs = np.bincount(flat, minlength=num_symbols).astype(np.int64)
     lengths = _code_lengths(freqs)
@@ -81,7 +86,7 @@ def huffman_encode(codes_arr: np.ndarray, num_symbols: int) -> bytes:
 
     header = (
         np.uint32(flat.size).tobytes()
-        + np.uint16(num_symbols).tobytes()
+        + np.uint16(num_symbols & 0xFFFF).tobytes()
         + lengths.astype(np.uint8).tobytes()
     )
     if not table:
@@ -113,7 +118,7 @@ def huffman_encode(codes_arr: np.ndarray, num_symbols: int) -> bytes:
 
 def huffman_decode(data: bytes) -> np.ndarray:
     n = int(np.frombuffer(data[:4], np.uint32)[0])
-    num_symbols = int(np.frombuffer(data[4:6], np.uint16)[0])
+    num_symbols = int(np.frombuffer(data[4:6], np.uint16)[0]) or (1 << 16)
     lengths = np.frombuffer(data[6 : 6 + num_symbols], np.uint8).astype(
         np.int64
     )

@@ -1,37 +1,56 @@
-"""Accuracy- and size-predictor tables A_i(c), S_i(c) (paper Sec. III-C).
+"""Accuracy- and size-predictor tables A_i(c), S_i(c) (paper Sec. III-C),
+extended with a codec axis: A[i, c, k] / S[i, c, k] for every registered
+boundary codec k the engine may choose.
 
 Built once offline from calibration data ("trained on ILSVRC2012" in the
 paper; here: any batch iterator). The paper's Fig. 5 observation — the
 per-(i, c) accuracy drop and compressed size are stable across epochs — is
 what makes a static lookup table sound; ``test_predictor_stability``
 re-validates it on our testbed.
+
+Codecs that share a *value transform* (``BoundaryCodec.value_key``, e.g.
+huffman and bitpack both reconstruct the per-tensor quantization) share
+one tail forward during calibration; only their wire sizes differ.
 """
 from __future__ import annotations
 
-import json
 import os
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compression as comp
-from repro.core.quantization import quantize_dequantize
 from repro.models.api import Model
 
 
 @dataclass
 class PredictorTables:
-    """A[i, c] = accuracy drop; S[i, c] = mean compressed bytes per sample."""
+    """A[i, c, k] = accuracy drop; S[i, c, k] = mean compressed bytes per
+    sample, for decoupling point i, bit width c, boundary codec k."""
 
     points: List[str]
     bits_choices: List[int]
-    acc_drop: np.ndarray          # (N, C)
-    size_bytes: np.ndarray        # (N, C)
+    codecs: List[str]
+    acc_drop: np.ndarray          # (N, C, K)
+    size_bytes: np.ndarray        # (N, C, K)
     base_accuracy: float
 
+    # ------------------------------------------------------------- views
+    def codec_index(self, name: str) -> int:
+        return self.codecs.index(name)
+
+    def drops(self, codec: Optional[str] = None) -> np.ndarray:
+        """(N, C) accuracy-drop table of one codec (default: first)."""
+        k = self.codec_index(codec) if codec else 0
+        return self.acc_drop[:, :, k]
+
+    def sizes(self, codec: Optional[str] = None) -> np.ndarray:
+        """(N, C) wire-size table of one codec (default: first)."""
+        k = self.codec_index(codec) if codec else 0
+        return self.size_bytes[:, :, k]
+
+    # -------------------------------------------------------- persistence
     def save(self, path: str) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         np.savez(
@@ -41,16 +60,26 @@ class PredictorTables:
             base_accuracy=self.base_accuracy,
             points=np.array(self.points),
             bits_choices=np.array(self.bits_choices),
+            codecs=np.array(self.codecs),
         )
 
     @classmethod
     def load(cls, path: str) -> "PredictorTables":
         z = np.load(path, allow_pickle=False)
+        acc = z["acc_drop"]
+        size = z["size_bytes"]
+        if acc.ndim == 2:             # pre-codec table files
+            acc = acc[:, :, None]
+            size = size[:, :, None]
+        codecs = (
+            [str(c) for c in z["codecs"]] if "codecs" in z else ["huffman"]
+        )
         return cls(
             points=[str(p) for p in z["points"]],
             bits_choices=[int(b) for b in z["bits_choices"]],
-            acc_drop=z["acc_drop"],
-            size_bytes=z["size_bytes"],
+            codecs=codecs,
+            acc_drop=acc,
+            size_bytes=size,
             base_accuracy=float(z["base_accuracy"]),
         )
 
@@ -67,15 +96,23 @@ def build_tables(
     batches: Sequence[Dict],
     bits_choices: Sequence[int],
     *,
+    codecs: Sequence[str] = ("huffman",),
     points: Optional[Sequence[int]] = None,
     labels_key: str = "labels",
 ) -> PredictorTables:
-    """Run calibration: for each decoupling point i and bit width c,
-    quantize the boundary features and measure (a) accuracy drop vs the
-    un-quantized model, (b) exact post-Huffman compressed size."""
+    """Run calibration: for each decoupling point i, bit width c and codec
+    k, reconstruct the boundary the cloud would see and measure (a) the
+    accuracy drop vs the un-quantized model, (b) the exact wire size.
+    Codecs with the same ``value_key`` share the tail forward."""
+    # Lazy: repro.codec depends on repro.core.quantization; importing it at
+    # module scope would cycle when repro.codec is imported first.
+    from repro.codec import get_codec
+
     names = model.decoupling_points()
     pts = list(points) if points is not None else list(range(len(names)))
     nC = len(bits_choices)
+    codec_objs = [get_codec(c) for c in codecs]
+    nK = len(codec_objs)
 
     head = jax.jit(model.run_head, static_argnums=2)
     tail = jax.jit(model.run_tail, static_argnums=2)
@@ -83,8 +120,8 @@ def build_tables(
 
     correct_base = 0
     total = 0
-    correct = np.zeros((len(pts), nC))
-    sizes = np.zeros((len(pts), nC))
+    correct = np.zeros((len(pts), nC, nK))
+    sizes = np.zeros((len(pts), nC, nK))
     n_batches = 0
 
     for batch in batches:
@@ -101,21 +138,30 @@ def build_tables(
             out = head(params, batch, point)
             boundary, extras = out if isinstance(out, tuple) else (out, None)
             for ci, bits in enumerate(bits_choices):
-                xq = quantize_dequantize(boundary, bits)
-                logits = np.asarray(
-                    tail(params, xq, point, extras)
-                    if extras is not None
-                    else tail(params, xq, point)
-                )
-                pred = _top1(logits)
-                correct[pi, ci] += int((pred == ref).sum())
-                sizes[pi, ci] += comp.transfer_size_bytes(boundary, bits) / bsz
+                n_ok_by_key: Dict[str, int] = {}
+                for ki, codec in enumerate(codec_objs):
+                    key = codec.value_key
+                    if key not in n_ok_by_key:
+                        xq = codec.simulate(boundary, bits)
+                        logits = np.asarray(
+                            tail(params, xq, point, extras)
+                            if extras is not None
+                            else tail(params, xq, point)
+                        )
+                        n_ok_by_key[key] = int(
+                            (_top1(logits) == ref).sum()
+                        )
+                    correct[pi, ci, ki] += n_ok_by_key[key]
+                    sizes[pi, ci, ki] += (
+                        codec.transfer_size_bytes(boundary, bits) / bsz
+                    )
 
     base_acc = correct_base / max(total, 1)
     acc = correct / max(total, 1)
     tables = PredictorTables(
         points=[names[p] for p in pts],
         bits_choices=list(bits_choices),
+        codecs=list(codecs),
         acc_drop=np.maximum(base_acc - acc, 0.0),
         size_bytes=sizes / max(n_batches, 1),
         base_accuracy=base_acc,

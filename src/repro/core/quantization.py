@@ -88,13 +88,14 @@ def quantization_mse(x: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 
 def pack_bits(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """Pack int codes (flat, values < 2^bits) into uint32 words. The input
-    length must be a multiple of ``32 // gcd`` packing granularity; we pad.
-    """
+    """Pack int codes (flat, values < 2^bits) into uint32 words, ``32 //
+    bits`` codes per word (codes never straddle a word boundary, so
+    non-power-of-two widths waste ``32 % bits`` bits per word). The input
+    is padded to a whole number of words."""
     if not (1 <= bits <= 16):
         raise ValueError(f"bits must be in [1,16], got {bits}")
     flat = codes.reshape(-1).astype(jnp.uint32)
-    per_word = 32 // bits if 32 % bits == 0 else 32 // bits
+    per_word = 32 // bits
     n = flat.shape[0]
     pad = (-n) % per_word
     flat = jnp.pad(flat, (0, pad))

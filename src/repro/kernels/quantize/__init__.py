@@ -8,6 +8,7 @@ from repro.kernels.quantize.ops import (
     quantize_pack,
     dequantize_unpack,
     dequantize_codes,
+    dequantize_wire,
     quantize_dequantize_kernel,
 )
 
@@ -15,5 +16,6 @@ __all__ = [
     "quantize_pack",
     "dequantize_unpack",
     "dequantize_codes",
+    "dequantize_wire",
     "quantize_dequantize_kernel",
 ]

@@ -22,17 +22,25 @@ def _should_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _tile_rows(n_elem: int, block_m: int) -> int:
+    """Padded row count of the (M, 128) tiling for ``n_elem`` elements.
+    Always at least one block so zero-element inputs still launch a
+    well-formed (if all-padding) grid."""
+    rows = (n_elem + LANES - 1) // LANES
+    return max((rows + block_m - 1) // block_m * block_m, block_m)
+
+
 def _to_tiles(x: jnp.ndarray, block_m: int) -> Tuple[jnp.ndarray, int]:
     """Flatten to (M, 128) and pad M to a block multiple. Returns the padded
     2-D array and the original element count."""
     n_elem = x.size
     flat = x.reshape(-1)
     cols = LANES
-    rows = (n_elem + cols - 1) // cols
-    rows_pad = (rows + block_m - 1) // block_m * block_m
+    rows_pad = _tile_rows(n_elem, block_m)
     pad = rows_pad * cols - n_elem
-    # Pad with the first element so padding never changes min/max.
-    fill = flat[0]
+    # Pad with the first element so padding never changes min/max (zeros
+    # for an empty input, which has no min/max to preserve).
+    fill = flat[0] if n_elem else jnp.zeros((), flat.dtype)
     flat = jnp.concatenate([flat, jnp.full((pad,), fill, flat.dtype)])
     return flat.reshape(rows_pad, cols), n_elem
 
@@ -46,8 +54,9 @@ def quantize_pack(
 ):
     """Fused min/max + affine quantization (+ nibble packing for bits<=4).
 
-    Returns (codes, mn, mx). codes is uint8 of x.size elements for bits>4,
-    or packed uint8 (two codes/byte) for bits<=4.
+    Returns (codes, mn, mx). codes is packed uint8 (two codes/byte) for
+    bits<=4, uint8 of x.size elements for 4<bits<=8, and uint16 for
+    8<bits<=16.
     """
     if interpret is None:
         interpret = _should_interpret()
@@ -103,12 +112,13 @@ def dequantize_codes(
     interpret: bool | None = None,
     out_dtype=jnp.float32,
 ):
-    """Cloud-side boundary codec: unpacked uint8 codes (any shape, e.g.
-    straight from the Huffman decoder) -> dequantized ``out_dtype`` tensor
-    of ``shape`` in a single fused dequant+cast ``pallas_call``."""
+    """Cloud-side boundary codec: unpacked integer codes (any shape, e.g.
+    straight from the Huffman decoder; uint8, or uint16 when bits > 8) ->
+    dequantized ``out_dtype`` tensor of ``shape`` in a single fused
+    dequant+cast ``pallas_call``."""
     if interpret is None:
         interpret = _should_interpret()
-    q2d, _ = _to_tiles(codes.astype(jnp.uint8), block_m)
+    q2d, _ = _to_tiles(codes.astype(k.code_dtype(bits)), block_m)
     bm = min(block_m, q2d.shape[0])
     x2d = k.fused_dequant_blocks(
         q2d, jnp.asarray(mn, jnp.float32), jnp.asarray(mx, jnp.float32),
@@ -116,6 +126,43 @@ def dequantize_codes(
     )
     n_elem = int(np.prod(shape))
     return x2d.reshape(-1)[:n_elem].reshape(shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "shape", "block_m", "interpret", "out_dtype"),
+)
+def dequantize_wire(
+    codes_flat: jnp.ndarray,
+    mn,
+    mx,
+    bits: int,
+    shape: Tuple[int, ...],
+    block_m: int = k.DEFAULT_BLOCK_M,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+):
+    """Cloud-side decode of the *bitpack wire format*: the flat device
+    codes exactly as ``quantize_pack`` emitted them, trimmed to the
+    elements of ``shape`` (nibble-packed uint8 for bits<=4, one uint8 per
+    element for 4<bits<=8, uint16 for 8<bits<=16). Re-pads to the tile
+    grid and runs the fused (unpack+)dequant+cast kernel in one launch."""
+    if interpret is None:
+        interpret = _should_interpret()
+    n_elem = int(np.prod(shape))
+    if n_elem == 0:
+        return jnp.zeros(shape, out_dtype)
+    # Rebuild the 2-D tile layout quantize_pack emitted, then delegate the
+    # fused launch + trim to dequantize_unpack (one implementation).
+    cols = LANES // 2 if bits <= 4 else LANES
+    rows_pad = _tile_rows(n_elem, block_m)
+    flat = codes_flat.reshape(-1)
+    flat = jnp.pad(flat, (0, rows_pad * cols - flat.shape[0]))
+    return dequantize_unpack(
+        flat.reshape(rows_pad, cols),
+        jnp.asarray(mn, jnp.float32), jnp.asarray(mx, jnp.float32),
+        bits, shape, block_m, interpret, out_dtype,
+    )
 
 
 def quantize_dequantize_kernel(x: jnp.ndarray, bits: int,

@@ -6,8 +6,9 @@ packing. On TPU we implement it as
 
   1. ``minmax_kernel``    — grid-parallel block min/max reduction
                             (HBM -> VMEM tiles, VPU reductions),
-  2. ``quantize_kernel``  — fused affine-map + round + clip to uint8 codes,
-                            with the (min, max) scalars in SMEM,
+  2. ``quantize_kernel``  — fused affine-map + round + clip to integer
+                            codes (uint8, or uint16 when bits > 8), with
+                            the (min, max) scalars in SMEM,
   3. ``pack4_kernel``     — two int4 codes per uint8 along the lane axis,
   4. ``dequant_cast_kernel``   — fused codes -> float -> target dtype
      (the cloud-side boundary codec: one launch instead of dequantize +
@@ -80,7 +81,12 @@ def _quantize_kernel(mn_ref, scale_ref, x_ref, out_ref):
     q = jnp.round((blk - mn) * scale)
     levels = scale_ref[1]           # (2^c - 1), passed alongside the scale
     q = jnp.clip(q, 0.0, levels)
-    out_ref[...] = q.astype(jnp.uint8)
+    out_ref[...] = q.astype(out_ref.dtype)
+
+
+def code_dtype(bits: int):
+    """Narrowest unsigned integer dtype that holds a c-bit code."""
+    return jnp.uint8 if bits <= 8 else jnp.uint16
 
 
 def quantize_blocks(x2d, mn, mx, bits, block_m, *, interpret):
@@ -99,7 +105,7 @@ def quantize_blocks(x2d, mn, mx, bits, block_m, *, interpret):
             pl.BlockSpec((block_m, n), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_m, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint8),
+        out_shape=jax.ShapeDtypeStruct((m, n), code_dtype(bits)),
         interpret=interpret,
     )(mn_arr, sc_arr, x2d)
 

@@ -73,13 +73,18 @@ def _serve_lm_continuous(args, cfg, model, params, sc) -> int:
 
 def serve_jalad(args) -> int:
     """Edge-cloud decoupled serving of the CNN testbed (the paper's mode)."""
+    from repro.codec import get_codec, list_codecs
     from repro.serving.edge_cloud import build_edge_cloud_server
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    codecs = tuple(list_codecs()) if args.codec == "auto" else (args.codec,)
+    for name in codecs:
+        get_codec(name)     # fail fast on a typo, before model/calibration
     jc = JaladConfig(bandwidth_bytes_per_s=args.bandwidth,
-                     accuracy_drop_budget=args.acc_drop)
+                     accuracy_drop_budget=args.acc_drop,
+                     codec_choices=codecs)
     server, params = build_edge_cloud_server(cfg, jc, seed=args.seed,
                                              calib_batches=args.calib,
                                              calib_batch_size=args.batch)
@@ -89,8 +94,9 @@ def serve_jalad(args) -> int:
     for i in range(args.requests):
         result, lat = server.serve_batch(batch, bandwidth=args.bandwidth)
         log.info(
-            "req %d: point=%d bits=%d edge=%.1fms xfer=%.1fms cloud=%.1fms "
-            "sent=%dB", i, lat.plan_point, lat.plan_bits, lat.edge_s * 1e3,
+            "req %d: point=%d bits=%d codec=%s edge=%.1fms xfer=%.1fms "
+            "cloud=%.1fms sent=%dB", i, lat.plan_point, lat.plan_bits,
+            lat.plan_codec, lat.edge_s * 1e3,
             lat.transfer_s * 1e3, lat.cloud_s * 1e3, lat.bytes_sent,
         )
     return 0
@@ -114,9 +120,10 @@ def _serve_jalad_pipelined(args, server, params) -> int:
     for req in pipe.serve(reqs):
         tl = req.timeline
         log.info(
-            "req %d: point=%d bits=%d edge=[%.1f,%.1f]ms xfer=[%.1f,%.1f]ms "
-            "cloud=[%.1f,%.1f]ms lat=%.1fms", req.uid, tl.plan_point,
-            tl.plan_bits, tl.edge_start * 1e3, tl.edge_end * 1e3,
+            "req %d: point=%d bits=%d codec=%s edge=[%.1f,%.1f]ms "
+            "xfer=[%.1f,%.1f]ms cloud=[%.1f,%.1f]ms lat=%.1fms", req.uid,
+            tl.plan_point, tl.plan_bits, tl.plan_codec,
+            tl.edge_start * 1e3, tl.edge_end * 1e3,
             tl.xfer_start * 1e3, tl.xfer_end * 1e3, tl.cloud_start * 1e3,
             tl.cloud_end * 1e3, tl.latency_s * 1e3,
         )
@@ -141,6 +148,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--bandwidth", type=float, default=1e6)
+    ap.add_argument("--codec", default="auto",
+                    help="boundary codec for --jalad: a registry id "
+                         "(huffman|bitpack|perchannel) or 'auto' to let "
+                         "the ILP choose among all registered codecs")
     ap.add_argument("--acc-drop", type=float, default=0.10)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--calib", type=int, default=2)

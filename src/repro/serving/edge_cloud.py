@@ -2,12 +2,13 @@
 
 A simulated-clock execution of decoupled inference:
 
-  edge compute (T = w*Q_edge/F_edge)  ->  compress (real Huffman bytes)
+  edge compute (T = w*Q_edge/F_edge)  ->  encode (real wire bytes from the
+  plan's boundary codec)
   ->  channel transfer (bytes / BW, with a bandwidth trace)
   ->  cloud compute (T = w*Q_cloud/F_cloud)
 
 The numerical result is produced by actually running the decoupled model
-(head -> compress -> decompress -> tail); the latency is accounted with the
+(head -> codec encode -> codec decode -> tail); the latency is accounted with the
 paper's FMAC model so experiments are device-independent and reproducible.
 The AdaptationController re-solves the ILP as the bandwidth trace drifts —
 reproducing the paper's Fig. 8 behaviour ("JALAD remains a stable low
@@ -34,6 +35,7 @@ class LatencyBreakdown:
     bytes_sent: int
     plan_point: int
     plan_bits: int
+    plan_codec: str = ""
 
     @property
     def total_s(self) -> float:
@@ -42,13 +44,13 @@ class LatencyBreakdown:
 
 @dataclass
 class RunnerCache:
-    """(point, bits) -> DecoupledRunner, shared by the synchronous and the
-    pipelined servers. Thread-safe: the pipelined server warms it from an
-    adaptation listener while the edge stage reads it."""
+    """(point, bits, codec) -> DecoupledRunner, shared by the synchronous
+    and the pipelined servers. Thread-safe: the pipelined server warms it
+    from an adaptation listener while the edge stage reads it."""
 
     engine: JaladEngine
     params: Any
-    _cache: Dict[Tuple[int, int], DecoupledRunner] = field(
+    _cache: Dict[Tuple[int, int, str], DecoupledRunner] = field(
         default_factory=dict
     )
     _lock: Any = None
@@ -59,7 +61,7 @@ class RunnerCache:
         self._lock = threading.Lock()
 
     def get(self, plan: DecoupledPlan) -> DecoupledRunner:
-        key = (plan.point, plan.bits)
+        key = (plan.point, plan.bits, plan.codec)
         with self._lock:
             runner = self._cache.get(key)
         if runner is None:
@@ -118,7 +120,7 @@ class EdgeCloudServer:
             cloud_t = float(lat.cloud_times()[plan.point])
             transfer_t = blob.nbytes / bandwidth
             bd = LatencyBreakdown(edge_t, transfer_t, cloud_t, blob.nbytes,
-                                  plan.point, plan.bits)
+                                  plan.point, plan.bits, plan.codec)
         # Feed the controller's bandwidth estimator with the observation.
         self.controller.observe_transfer(max(bd.bytes_sent, 1),
                                          max(bd.transfer_s, 1e-9))
@@ -172,7 +174,9 @@ def build_edge_cloud_server(
         step = max(n_points // 16, 1)
         points = list(range(0, n_points, step))
     tables = build_tables(model, params, batches,
-                          list(jalad_cfg.bits_choices), points=points)
+                          list(jalad_cfg.bits_choices),
+                          codecs=list(jalad_cfg.codec_choices),
+                          points=points)
     if cfg.family == "cnn":
         input_bytes = calib_batch_size * 3 * cfg.image_size * cfg.image_size
     else:

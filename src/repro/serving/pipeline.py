@@ -62,6 +62,7 @@ class StageTimeline:
     bytes_sent: int = 0
     plan_point: int = -1
     plan_bits: int = 0
+    plan_codec: str = ""
 
     @property
     def latency_s(self) -> float:
@@ -215,6 +216,7 @@ class PipelinedEdgeCloudServer:
             self._cloud_free = tl.cloud_end
             tl.plan_point = plan.point
             tl.plan_bits = plan.bits
+            tl.plan_codec = plan.codec if not plan.is_cloud_only else ""
             req._blob = req._extras = None
             self.completed.append(req)
 

@@ -26,10 +26,12 @@ def test_decide_feasible_and_within_budget(server):
     plan = eng.decide(bandwidth=1e6)
     assert plan.predicted_acc_drop <= eng.cfg.accuracy_drop_budget + 1e-9
     assert plan.solve_ms < 50
+    # the plan names the boundary codec the ILP picked
+    assert plan.codec in eng.tables.codecs
 
 
 def test_low_bandwidth_prefers_smaller_transfers(server):
-    """At lower BW the chosen (i, c) must not transfer MORE bytes."""
+    """At lower BW the chosen (i, c, codec) must not transfer MORE bytes."""
     eng = server.engine
     hi = eng.decide(bandwidth=10e6)
     lo = eng.decide(bandwidth=50e3)
@@ -39,7 +41,8 @@ def test_low_bandwidth_prefers_smaller_transfers(server):
     def bytes_of(plan):
         if plan.is_cloud_only:
             return eng.latency.input_bytes * 0.42
-        return size[rows.index(plan.point), bits.index(plan.bits)]
+        return size[rows.index(plan.point), bits.index(plan.bits),
+                    eng.tables.codec_index(plan.codec)]
     assert bytes_of(lo) <= bytes_of(hi) + 1e-6
 
 

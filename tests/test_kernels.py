@@ -70,6 +70,39 @@ def test_kernel_roundtrip_error_bound():
         assert float(jnp.max(jnp.abs(got - x))) <= step / 2 + 1e-6
 
 
+def test_empty_input_regression():
+    """Zero-element boundaries must encode/decode to empty tensors instead
+    of crashing in ``_to_tiles`` (which used to index ``flat[0]``)."""
+    for shape in [(0,), (0, 4), (2, 0, 3)]:
+        x = jnp.zeros(shape, jnp.float32)
+        codes, mn, mx = ops.quantize_pack(x, 8, interpret=True)
+        assert float(mn) == float(mx) == 0.0
+        back = ops.dequantize_unpack(codes, mn, mx, 8, shape, interpret=True)
+        assert tuple(back.shape) == shape and back.size == 0
+        wire = ops.dequantize_wire(jnp.zeros((0,), jnp.uint8), mn, mx, 8,
+                                   shape, interpret=True)
+        assert tuple(wire.shape) == shape and wire.size == 0
+
+
+@pytest.mark.parametrize("shape", [(256, 128), (65,), (3, 5, 7)])
+def test_uint16_codes_bits12(shape):
+    """bits > 8 widen the code path to uint16 end to end: the quantize
+    kernel emits uint16 and both fused dequant entry points accept it."""
+    x = _rand(shape, jnp.float32, seed=7)
+    codes, mn, mx = ops.quantize_pack(x, 12, interpret=True)
+    assert codes.dtype == jnp.uint16
+    want = jax.jit(lambda a: ref.quantize_dequantize_ref(a, 12))(x)
+    got = ops.dequantize_unpack(codes, mn, mx, 12, shape, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    flat = np.asarray(codes).reshape(-1)[: x.size]
+    got2 = ops.dequantize_wire(jnp.asarray(flat), mn, mx, 12, shape,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(want))
+    got3 = ops.dequantize_codes(jnp.asarray(flat, jnp.uint16), mn, mx, 12,
+                                shape, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got3), np.asarray(want))
+
+
 def test_kernel_under_jit_grad_context():
     """The kernel path must be usable inside larger jitted programs."""
     x = _rand((256, 128), jnp.float32, seed=5)

@@ -10,20 +10,37 @@ from repro.core.predictor import PredictorTables, build_tables
 from repro.data.synthetic import make_batch
 
 
-def _tables(arch="resnet50", bits=(2, 4, 8), n_batches=2, seed=0):
+def _tables(arch="resnet50", bits=(2, 4, 8), n_batches=2, seed=0,
+            codecs=("huffman",)):
     model, params = reduced_model(arch)
     batches = [make_batch(model.cfg, 8, 24, seed=seed + i)
                for i in range(n_batches)]
-    return model, params, build_tables(model, params, batches, list(bits))
+    return model, params, build_tables(model, params, batches, list(bits),
+                                       codecs=codecs)
 
 
 def test_tables_shapes_and_ranges():
     model, _, t = _tables()
     n = len(model.decoupling_points())
-    assert t.acc_drop.shape == (n, 3)
-    assert t.size_bytes.shape == (n, 3)
+    assert t.acc_drop.shape == (n, 3, 1)
+    assert t.size_bytes.shape == (n, 3, 1)
+    assert t.codecs == ["huffman"]
     assert (t.acc_drop >= 0).all() and (t.acc_drop <= 1).all()
     assert (t.size_bytes > 0).all()
+
+
+def test_tables_codec_axis():
+    """One size/accuracy column per codec; per-tensor codecs share the
+    accuracy transform, the fixed-rate codec reports shape-only sizes."""
+    model, _, t = _tables(codecs=("huffman", "bitpack", "perchannel"))
+    n = len(model.decoupling_points())
+    assert t.acc_drop.shape == (n, 3, 3)
+    assert t.size_bytes.shape == (n, 3, 3)
+    np.testing.assert_array_equal(t.drops("huffman"), t.drops("bitpack"))
+    assert t.sizes("huffman").shape == (n, 3)
+    # huffman entropy-codes the (sparse) features: never above the
+    # fixed-rate bitpack payload by more than its table header
+    assert (t.sizes("huffman") <= t.sizes("bitpack") + 6 + 256).all()
 
 
 def test_size_monotone_in_bits():
@@ -55,6 +72,7 @@ def test_save_load_roundtrip(tmp_path):
     np.testing.assert_array_equal(t.acc_drop, t2.acc_drop)
     np.testing.assert_array_equal(t.size_bytes, t2.size_bytes)
     assert t.points == t2.points
+    assert t.codecs == t2.codecs
 
 
 # ---------------------------------------------------------------------- lat

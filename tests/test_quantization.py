@@ -108,6 +108,22 @@ def test_pack_unpack_roundtrip(n, bits, seed):
     assert words.size * 4 + 8 == packed_size_bytes(n, bits)
 
 
+@pytest.mark.parametrize("bits", [3, 5, 6])
+@pytest.mark.parametrize("n", [1, 7, 31, 1000])
+def test_pack_unpack_non_power_of_two_widths(bits, n):
+    """Codes never straddle a uint32 boundary: 32 // bits codes per word,
+    and pack/unpack/size bookkeeping all agree for widths that don't
+    divide 32."""
+    rng = np.random.default_rng(bits * 1000 + n)
+    codes = rng.integers(0, 1 << bits, size=n).astype(np.int32)
+    words = pack_bits(jnp.asarray(codes), bits)
+    per_word = 32 // bits
+    assert words.size == (n + per_word - 1) // per_word
+    back = unpack_bits(words, bits, n)
+    np.testing.assert_array_equal(np.asarray(back), codes)
+    assert words.size * 4 + 8 == packed_size_bytes(n, bits)
+
+
 def test_packed_size_smaller_than_float():
     n = 10_000
     assert packed_size_bytes(n, 4) < n * 4 / 7   # ~8x smaller than f32
