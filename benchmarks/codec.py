@@ -1,13 +1,26 @@
-"""Boundary-codec comparison: edge-encode / cloud-decode latency and wire
-bytes for every registered codec at several bit widths.
+"""Boundary-codec comparison: edge-encode / cloud-decode latency, wire
+bytes, pallas_call launch counts, and micro-batched encode throughput.
 
-The claim checked by assertion (so ``benchmarks.run`` fails loudly if it
-regresses): the ``bitpack`` codec's *device-side* edge encode (one jitted
-fused Pallas quantize+pack launch + host framing) is faster than the
-``huffman`` codec's host path (quantize + pure-Python/numpy Huffman) at
-equal bit width — the encode half of the codec no longer scales with the
-host's entropy coder. Huffman keeps the smallest wire; the ILP trades
-those two against the link bandwidth.
+Claims checked by assertion (so ``benchmarks.run`` fails loudly if they
+regress):
+
+1. The ``bitpack`` codec's device-side edge encode beats the ``huffman``
+   codec's host path (quantize + Huffman) at equal bit width.
+2. The fused **single-launch** edge encode (hierarchical min/max
+   reduction + quantize + pack in one two-phase pallas_call) is strictly
+   faster than the PR 2 three-launch chain (minmax -> quantize -> pack4)
+   at bits 4 and 8 — fewer dispatches and no codes round trip through
+   HBM.
+3. Launch accounting: fused encode = 1 pallas_call, PR 2 chain = 3
+   (2 above 4 bits), per-channel fused encode = 1, and a B=8 micro-batch
+   still = 1.
+4. Micro-batched encode (B=8 same-shape boundary tensors, one stacked
+   launch with per-sample ranges) achieves >= 2x the per-tensor encode
+   throughput on serving-sized boundaries — the dispatch amortization
+   the pipelined edge stage banks on.
+
+Huffman keeps the smallest wire; the ILP trades encode cost against
+transfer bytes.
 """
 from __future__ import annotations
 
@@ -19,10 +32,14 @@ import jax.numpy as jnp
 
 from benchmarks.common import fmt_table, save_result
 from repro.codec import get_codec, list_codecs
+from repro.kernels.quantize import ops
 
 SHAPE_QUICK = (8, 32, 28, 28)        # ~200k elements, NCHW feature map
 SHAPE_FULL = (16, 64, 56, 56)        # ~3.2M elements
+MICRO_SHAPE = (2, 8, 14, 14)         # serving-sized boundary tensor
+MICRO_B = 8
 BITS = (2, 4, 8)
+FUSED_BITS = (4, 8)
 REPEATS = 3
 
 
@@ -40,6 +57,13 @@ def _best_of(fn, repeats=REPEATS):
         out = fn()
         best = min(best, time.perf_counter() - t0)
     return best, out
+
+
+def _launches(fn) -> int:
+    """pallas_call dispatches of one eager (un-jitted impl) invocation."""
+    with ops.count_launches() as c:
+        fn()
+    return c.count
 
 
 def run(quick: bool = True) -> Dict:
@@ -80,6 +104,99 @@ def run(quick: bool = True) -> Dict:
             f"ms) must beat host Huffman ({encode_ms[('huffman', bits)]:.2f}"
             f"ms) at c={bits}"
         )
+
+    # ------------------------------------------------- launch accounting
+    xs_micro = tuple(_features(MICRO_SHAPE, seed=10 + i)
+                     for i in range(MICRO_B))
+    launches = {
+        "fused": _launches(
+            lambda: ops.quantize_pack_impl(x, 4, interpret=True)),
+        "threelaunch": _launches(
+            lambda: ops.quantize_pack_threelaunch_impl(x, 4,
+                                                       interpret=True)),
+        "perchannel": _launches(
+            lambda: ops.perchannel_encode_impl(x, 4, 1, interpret=True)),
+        "batched_b8": _launches(
+            lambda: ops.quantize_pack_batch_impl(jnp.stack(xs_micro), 4,
+                                                 interpret=True)),
+    }
+    results["encode_launches"] = launches
+    print("\nEdge-encode pallas_call launches: "
+          + "  ".join(f"{k}={v}" for k, v in launches.items()))
+    assert launches["fused"] == 1 and launches["batched_b8"] == 1
+    assert launches["perchannel"] == 1
+    assert launches["threelaunch"] == 3
+
+    # ------------------------------- fused vs PR 2 three-launch encode
+    # Two baselines so fusion and tile retuning are attributed separately:
+    # "PR 2 as shipped" is the three-launch chain at its original
+    # block_m=256, "retiled" the same chain at today's shared
+    # DEFAULT_BLOCK_M — the residual fused-vs-retiled margin is the pure
+    # fusion win (one dispatch, no codes round trip through HBM).
+    fused_rows = []
+    results["fused_vs_threelaunch"] = {}
+    for bits in FUSED_BITS:
+        fused = lambda: ops.quantize_pack(
+            x, bits)[0].block_until_ready()                 # noqa: B023
+        shipped = lambda: ops.quantize_pack_threelaunch(
+            x, bits, block_m=256)[0].block_until_ready()    # noqa: B023
+        retiled = lambda: ops.quantize_pack_threelaunch(
+            x, bits)[0].block_until_ready()                 # noqa: B023
+        fused()
+        shipped()
+        retiled()
+        t_fused, _ = _best_of(fused)
+        t_shipped, _ = _best_of(shipped)
+        t_retiled, _ = _best_of(retiled)
+        results["fused_vs_threelaunch"][bits] = {
+            "fused_ms": t_fused * 1e3,
+            "threelaunch_shipped_ms": t_shipped * 1e3,
+            "threelaunch_retiled_ms": t_retiled * 1e3,
+        }
+        fused_rows.append([f"c={bits}", f"{t_fused * 1e3:.2f}ms",
+                           f"{t_shipped * 1e3:.2f}ms",
+                           f"{t_retiled * 1e3:.2f}ms",
+                           f"{t_shipped / t_fused:.2f}x"])
+        assert t_fused < t_shipped, (
+            f"fused single-launch encode ({t_fused * 1e3:.2f}ms) must beat "
+            f"the PR 2 three-launch encode ({t_shipped * 1e3:.2f}ms) at "
+            f"c={bits}"
+        )
+    print("\nFused single-launch vs PR 2 three-launch edge encode "
+          f"on {shape}")
+    print(fmt_table(fused_rows, ["bits", "fused",
+                                 "3-launch (PR2, bm=256)",
+                                 "3-launch (retiled)", "vs PR2"]))
+
+    # ------------------------------------ micro-batched encode throughput
+    batch_rows = []
+    results["batched_encode"] = {}
+    for name in ("bitpack", "perchannel"):
+        codec = get_codec(name)
+        codec.encode(xs_micro[0], 4)
+        codec.encode_batch(xs_micro, 4)       # warm up
+        t_single, _ = _best_of(
+            lambda: [codec.encode(xx, 4) for xx in xs_micro]
+        )
+        t_batch, _ = _best_of(lambda: codec.encode_batch(xs_micro, 4))
+        ratio = t_single / t_batch
+        results["batched_encode"][name] = {
+            "shape": list(MICRO_SHAPE), "batch": MICRO_B,
+            "per_tensor_ms": t_single * 1e3, "batched_ms": t_batch * 1e3,
+            "throughput_x": ratio,
+        }
+        batch_rows.append([name, f"{t_single * 1e3:.2f}ms",
+                           f"{t_batch * 1e3:.2f}ms", f"{ratio:.2f}x"])
+    print(f"\nMicro-batched edge encode, B={MICRO_B} x {MICRO_SHAPE} "
+          "boundaries, c=4")
+    print(fmt_table(batch_rows, ["codec", f"{MICRO_B}x per-tensor",
+                                 "one batched launch", "throughput"]))
+    bp = results["batched_encode"]["bitpack"]["throughput_x"]
+    assert bp >= 2.0, (
+        f"batched bitpack encode at B={MICRO_B} must reach >= 2x the "
+        f"per-tensor throughput, got {bp:.2f}x"
+    )
+
     path = save_result("codec", results)
     print(f"wrote {path}")
     return results

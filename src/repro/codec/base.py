@@ -26,7 +26,7 @@ from __future__ import annotations
 
 from abc import ABC, abstractmethod
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -95,6 +95,25 @@ class BoundaryCodec(ABC):
         """Shape-only wire size: exact for fixed-rate codecs, an upper
         bound for entropy-coded ones."""
 
+    # ------------------------------------------------------ batched API
+    def encode_batch(self, xs: Sequence[jnp.ndarray], bits: int
+                     ) -> List["WireBlob"]:
+        """Encode a stack of boundary tensors in one go (the serving
+        pipeline's micro-batched edge step). The base implementation
+        loops — correct for any codec, and the only option for host
+        entropy coders like huffman whose encode is inherently
+        per-tensor. Device codecs override it with a single batched
+        kernel launch when every tensor shares one shape; each blob must
+        be byte-identical to ``encode`` of that tensor alone."""
+        return [self.encode(x, bits) for x in xs]
+
+    def decode_batch(self, blobs: Sequence["WireBlob"],
+                     out_dtype=jnp.float32) -> List[jnp.ndarray]:
+        """Batched inverse of :meth:`encode_batch`; same contract (one
+        launch when the blobs are stackable, bit-identical per-tensor
+        results)."""
+        return [self.decode(b, out_dtype) for b in blobs]
+
     # ------------------------------------------------------------ hooks
     def transfer_size_bytes(self, x: jnp.ndarray, bits: int) -> int:
         """Exact data-dependent wire size (what S_i(c) records). Fixed-rate
@@ -105,6 +124,15 @@ class BoundaryCodec(ABC):
         """The dequantized values the cloud will reconstruct, in-graph
         (used by accuracy calibration and ``run_simulated``)."""
         return quantize_dequantize(x, bits)
+
+
+def stackable_shapes(shapes: List[Tuple[int, ...]]) -> bool:
+    """True when one batched device launch can cover a stack of boundary
+    tensors with these shapes: more than one tensor, a single common
+    shape, at least one element. The shared gate behind every codec's
+    ``encode_batch``/``decode_batch`` fast path."""
+    return (len(shapes) > 1 and len(set(shapes)) == 1
+            and int(np.prod(shapes[0])) > 0)
 
 
 # ---------------------------------------------------------------------------

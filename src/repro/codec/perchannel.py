@@ -1,12 +1,25 @@
-"""Per-channel boundary codec: vector range headers + true c-bit packing.
+"""Per-channel boundary codec: vector range headers + true c-bit packing,
+on the same fused device kernels as ``bitpack``.
 
 The ``axis=`` variant of ``repro.core.quantization.quantize`` (tighter
 per-channel min/max ranges -> lower error at the same bit width) existed
 but never had a wire format — nothing could actually ship it. This codec
-gives it one: codes are packed to exactly ``bits`` bits each (``32 //
-bits`` per uint32 word via ``pack_bits``), and the header carries one
+gives it one, and since PR 3 the edge half runs **device-side**: one
+fused ``perchannel_encode`` pallas_call takes the per-channel (min,
+scale) *vectors* as kernel operands and packs the codes to exactly
+``bits`` bits each in-kernel (``32 // bits`` codes per uint32 word, codes
+never straddling a word) — no host ``pack_bits`` pass. The host only
+trims each channel's word row (framing). The cloud half is the symmetric
+fused unpack + dequant + cast launch, and both halves are batched
+(``encode_batch``/``decode_batch``: one launch per micro-batch of
+same-shape boundaries, per-(sample, channel) ranges).
+
+Wire layout: channel-major — each channel's ``ceil(L / (32 // bits))``
+uint32 words, channels concatenated, so channels never share a word and
+the cloud can decode them independently. The header carries one
 (min, max) float32 pair per channel instead of one per tensor, which the
-ILP sees as ``8 * C`` extra header bytes traded against the accuracy gain.
+ILP sees as ``8 * C`` extra header bytes traded against the accuracy
+gain.
 
 Channel axis convention: dim 1 for 4-D tensors (this repo's CNN layout is
 NCHW) and the trailing dim otherwise (transformer ``(B, S, D)`` /
@@ -14,33 +27,41 @@ NCHW) and the trailing dim otherwise (transformer ``(B, S, D)`` /
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.codec.base import BoundaryCodec, WireBlob, register_codec
+from repro.codec.base import (
+    BoundaryCodec,
+    WireBlob,
+    register_codec,
+    stackable_shapes,
+)
 from repro.core import quantization as q
+from repro.kernels.quantize import (
+    perchannel_decode,
+    perchannel_decode_batch,
+    perchannel_encode,
+    perchannel_encode_stack,
+    perchannel_words,
+)
 
 
 def channel_axis(ndim: int) -> int:
     return 1 if ndim == 4 else max(ndim - 1, 0)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("bits", "shape", "axis", "out_dtype")
-)
-def _unpack_dequant(words, mn, mx, bits, shape, axis, out_dtype):
-    n = int(np.prod(shape))
-    codes = q.unpack_bits(words, bits, n).reshape(shape)
-    return q.dequantize(q.Quantized(codes, mn, mx, bits), out_dtype, axis)
-
-
 class PerChannelCodec(BoundaryCodec):
     name = "perchannel"
     value_key = "channel"
+
+    def _frame(self, words: np.ndarray, length: int, bits: int) -> bytes:
+        """Trim one sample's (C, W_pad) device words to the wire's
+        ceil(L / per_word) words per channel (host framing only)."""
+        return np.ascontiguousarray(
+            words[:, : perchannel_words(length, bits)]
+        ).astype("<u4").tobytes()
 
     def encode(self, x: jnp.ndarray, bits: int) -> WireBlob:
         shape = tuple(x.shape)
@@ -50,30 +71,74 @@ class PerChannelCodec(BoundaryCodec):
             zeros = np.zeros((c,), np.float32)
             return WireBlob(self.name, b"", shape, bits, zeros, zeros,
                             axis=ax)
-        quantized = q.quantize(jnp.asarray(x), bits, axis=ax)
-        words = q.pack_bits(quantized.values, bits)
+        words, mn, mx = perchannel_encode(jnp.asarray(x), bits, ax)
+        payload = self._frame(np.asarray(words),
+                              int(x.size) // shape[ax], bits)
         return WireBlob(
-            self.name, np.asarray(words).astype("<u4").tobytes(), shape,
-            bits, np.asarray(quantized.x_min, np.float32),
-            np.asarray(quantized.x_max, np.float32), axis=ax,
+            self.name, payload, shape, bits,
+            np.asarray(mn, np.float32), np.asarray(mx, np.float32),
+            axis=ax,
         )
+
+    def encode_batch(self, xs: Sequence[jnp.ndarray], bits: int
+                     ) -> List[WireBlob]:
+        xs = list(xs)
+        shapes = [tuple(x.shape) for x in xs]
+        if not stackable_shapes(shapes):
+            return [self.encode(x, bits) for x in xs]
+        shape = shapes[0]
+        ax = channel_axis(len(shape))
+        length = int(np.prod(shape)) // shape[ax]
+        words, mn, mx = perchannel_encode_stack(
+            tuple(jnp.asarray(x) for x in xs), bits, ax
+        )
+        words = np.asarray(words)
+        mn = np.asarray(mn, np.float32)
+        mx = np.asarray(mx, np.float32)
+        return [
+            WireBlob(self.name, self._frame(words[i], length, bits),
+                     shape, bits, mn[i], mx[i], axis=ax)
+            for i in range(len(xs))
+        ]
+
+    def _wire_words(self, blob: WireBlob) -> np.ndarray:
+        c = blob.shape[blob.axis]
+        length = blob.num_elements // c
+        return (np.frombuffer(blob.payload, "<u4").astype(np.uint32)
+                .reshape(c, perchannel_words(length, blob.bits)))
 
     def decode(self, blob: WireBlob, out_dtype=jnp.float32) -> jnp.ndarray:
         if blob.num_elements == 0:
             return jnp.zeros(blob.shape, out_dtype)
-        words = jnp.asarray(np.frombuffer(blob.payload, "<u4")
-                            .astype(np.uint32))
-        return _unpack_dequant(
-            words, jnp.asarray(blob.x_min), jnp.asarray(blob.x_max),
-            blob.bits, blob.shape, blob.axis, jnp.dtype(out_dtype),
+        return perchannel_decode(
+            jnp.asarray(self._wire_words(blob)),
+            jnp.asarray(blob.x_min), jnp.asarray(blob.x_max),
+            blob.bits, blob.shape, blob.axis, out_dtype=jnp.dtype(out_dtype),
         )
+
+    def decode_batch(self, blobs: Sequence[WireBlob],
+                     out_dtype=jnp.float32) -> List[jnp.ndarray]:
+        blobs = list(blobs)
+        shapes = [b.shape for b in blobs]
+        if (not stackable_shapes(shapes)
+                or len({b.bits for b in blobs}) != 1):
+            return [self.decode(b, out_dtype) for b in blobs]
+        first = blobs[0]
+        words = jnp.asarray(np.stack([self._wire_words(b) for b in blobs]))
+        mn = jnp.asarray(np.stack([b.x_min for b in blobs]))
+        mx = jnp.asarray(np.stack([b.x_max for b in blobs]))
+        out = perchannel_decode_batch(
+            words, mn, mx, first.bits, first.shape, first.axis,
+            out_dtype=jnp.dtype(out_dtype),
+        )
+        return [out[i] for i in range(len(blobs))]
 
     def wire_size_bytes(self, shape: Tuple[int, ...], bits: int) -> int:
         n = int(np.prod(shape)) if shape else 1
         c = shape[channel_axis(len(shape))] if shape else 1
-        per_word = 32 // bits
-        words = (n + per_word - 1) // per_word
-        return words * 4 + 8 * c + 1
+        if n == 0 or c == 0:
+            return 8 * c + 1
+        return c * perchannel_words(n // c, bits) * 4 + 8 * c + 1
 
     def simulate(self, x: jnp.ndarray, bits: int) -> jnp.ndarray:
         return q.quantize_dequantize(x, bits, axis=channel_axis(x.ndim))

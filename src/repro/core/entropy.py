@@ -116,21 +116,20 @@ def huffman_encode(codes_arr: np.ndarray, num_symbols: int) -> bytes:
     return header + np.packbits(bits).tobytes()
 
 
-def huffman_decode(data: bytes) -> np.ndarray:
-    n = int(np.frombuffer(data[:4], np.uint32)[0])
-    num_symbols = int(np.frombuffer(data[4:6], np.uint16)[0]) or (1 << 16)
-    lengths = np.frombuffer(data[6 : 6 + num_symbols], np.uint8).astype(
-        np.int64
-    )
-    table = _canonical_codes(lengths)
-    out = np.zeros(n, np.int64)
-    if not table or n == 0:
-        return out
-    # Invert: (length, code) -> symbol.
+# LUT window width cap: build cost is O(2^k · k), decode hops are
+# O(n · H / k), and codes longer than k resolve per-symbol — 13 balances
+# the three (a 16-bit window's build alone costs more than it saves).
+_TABLE_K_MAX = 13
+_TABLE_MIN_N = 512      # below this, the per-symbol walk beats table build
+
+
+def _decode_bitwalk(stream: bytes, table, n: int) -> np.ndarray:
+    """Per-symbol fallback: incremental canonical-code walk. Used for tiny
+    payloads (table build would dominate) and for pathological trees with
+    codes longer than ``_TABLE_K_MAX`` bits."""
     inv = {(l, c): s for s, (c, l) in table.items()}
-    bits = np.unpackbits(
-        np.frombuffer(data[6 + num_symbols :], np.uint8)
-    )
+    bits = np.unpackbits(np.frombuffer(stream, np.uint8))
+    out = np.zeros(n, np.int64)
     code, length, j, i = 0, 0, 0, 0
     while j < n:
         code = (code << 1) | int(bits[i])
@@ -142,6 +141,157 @@ def huffman_decode(data: bytes) -> np.ndarray:
             j += 1
             code, length = 0, 0
     return out
+
+
+def _canonical_ranges(lengths: np.ndarray):
+    """Numeric canonical-code ranges: codes of length l occupy
+    ``[first_code[l], first_code[l] + counts[l])`` and map to the symbols
+    ``rank_sym[offset[l] + (code - first_code[l])]``."""
+    max_len = int(lengths.max())
+    counts = np.bincount(lengths, minlength=max_len + 1)[: max_len + 1]
+    counts[0] = 0
+    first_code = np.zeros(max_len + 2, np.int64)
+    offset = np.zeros(max_len + 2, np.int64)
+    for length in range(1, max_len + 1):
+        first_code[length + 1] = (first_code[length] + counts[length]) << 1
+        offset[length + 1] = offset[length] + counts[length]
+    order = sorted((int(l), int(s)) for s, l in enumerate(lengths) if l > 0)
+    rank_sym = np.array([s for _, s in order], np.int64)
+    return first_code, offset, counts, rank_sym
+
+
+def _build_chunk_table(lengths: np.ndarray, k: int, ranges):
+    """Multi-symbol decode LUT over every k-bit window.
+
+    Built fully vectorized over all 2^k windows: first a one-symbol LUT
+    from the canonical numeric ``ranges`` (as computed by
+    :func:`_canonical_ranges`), then chained up to ``k // min_len`` times
+    to record every complete symbol inside the window. Returns
+    (syms (2^k, max_emit), cnt (2^k,), used (2^k,)): the symbols fully
+    contained in the window, how many, and the bits they consume.
+    Windows whose first code is longer than k bits get cnt = 0 — the
+    decoder resolves those (rare by construction: long codes belong to
+    rare symbols) with a per-symbol range walk.
+    """
+    first_code, offset, counts, rank_sym = ranges
+    max_len = min(int(lengths.max()), k)
+
+    ws = np.arange(1 << k, dtype=np.int64)
+    sym1 = np.zeros(1 << k, np.int64)
+    len1 = np.zeros(1 << k, np.int64)
+    todo = np.ones(1 << k, bool)
+    for length in range(1, max_len + 1):
+        if not counts[length]:
+            continue
+        cand = ws >> (k - length)
+        idx = cand - first_code[length]
+        ok = todo & (idx >= 0) & (idx < counts[length])
+        sym1[ok] = rank_sym[offset[length] + idx[ok]]
+        len1[ok] = length
+        todo &= ~ok
+
+    min_len = int(lengths[lengths > 0].min())
+    max_emit = max(k // min_len, 1)
+    syms = np.zeros((1 << k, max_emit), np.int64)
+    cnt = np.zeros(1 << k, np.int64)
+    used = np.zeros(1 << k, np.int64)
+    cur = ws.copy()
+    rem = np.full(1 << k, k, np.int64)
+    active = np.ones(1 << k, bool)
+    for j in range(max_emit):
+        length = len1[cur]
+        ok = active & (length > 0) & (length <= rem)
+        syms[ok, j] = sym1[cur[ok]]
+        cnt[ok] += 1
+        used[ok] += length[ok]
+        rem[ok] -= length[ok]
+        cur[ok] = (cur[ok] << length[ok]) & ((1 << k) - 1)
+        active = ok
+    return syms, cnt, used
+
+
+def _decode_chunked(stream: bytes, lengths: np.ndarray, n: int
+                    ) -> np.ndarray:
+    """Table/chunk-driven decode: the inner loop advances one k-bit window
+    (several symbols) per iteration via the multi-symbol LUT, and the
+    symbol emission itself is one vectorized gather over the visited
+    windows — no per-symbol Python, no per-bit dict walk. Codes longer
+    than the window (rare symbols in deep trees) fall back to a
+    per-symbol canonical range walk for that one symbol."""
+    max_len = int(lengths.max())
+    k = min(_TABLE_K_MAX, max(max_len, 12))
+    ranges = _canonical_ranges(lengths)
+    first_code, offset, counts_per_len, rank_sym = ranges
+    syms_t, cnt_t, used_t = _build_chunk_table(lengths, k, ranges)
+    cu_l = list(zip(cnt_t.tolist(), used_t.tolist()))
+
+    # 24-bit big-endian window starting at every byte: enough reach for a
+    # k<=16-bit read at any intra-byte offset.
+    by = np.frombuffer(stream, np.uint8).astype(np.int64)
+    by_pad = np.concatenate([by, np.zeros(3, np.int64)])
+    w24 = (by_pad[:-2] << 16) | (by_pad[1:-1] << 8) | by_pad[2:]
+    mask = (1 << k) - 1
+    shift_base = 24 - k
+    w24_l = w24.tolist()
+    by_l = by_pad.tolist()
+
+    # Pass 1: walk the chain of window positions (pure scalar index math —
+    # each hop consumes every complete symbol in the window). A hop whose
+    # window starts with an over-long code (cnt == 0) resolves exactly one
+    # symbol by the canonical ranges and records it as a negative literal.
+    chain = []
+    push = chain.append
+    pos = 0
+    emitted = 0
+    while emitted < n:
+        w = (w24_l[pos >> 3] >> (shift_base - (pos & 7))) & mask
+        c, u = cu_l[w]
+        if c:
+            push(w)
+            emitted += c
+            pos += u
+        else:
+            code = w                                # the k bits read so far
+            length = k
+            while True:
+                length += 1
+                p = pos + length - 1
+                code = (code << 1) | ((by_l[p >> 3] >> (7 - (p & 7))) & 1)
+                idx = code - first_code[length]
+                if length <= max_len and 0 <= idx < counts_per_len[length]:
+                    break
+            push(-(int(rank_sym[offset[length] + idx]) + 1))
+            emitted += 1
+            pos += length
+
+    # Pass 2: vectorized emission over all visited windows at once;
+    # literal hops contribute their single symbol in place.
+    visited = np.asarray(chain, np.int64)
+    literal = visited < 0
+    counts = np.where(literal, 1, cnt_t[np.where(literal, 0, visited)])
+    symmat = syms_t[np.where(literal, 0, visited)]
+    if literal.any():
+        symmat = symmat.copy()
+        symmat[literal, 0] = -visited[literal] - 1
+    grid = np.arange(syms_t.shape[1], dtype=np.int64)[None, :]
+    picked = symmat[grid < counts[:, None]]
+    return picked[:n]
+
+
+def huffman_decode(data: bytes) -> np.ndarray:
+    n = int(np.frombuffer(data[:4], np.uint32)[0])
+    num_symbols = int(np.frombuffer(data[4:6], np.uint16)[0]) or (1 << 16)
+    lengths = np.frombuffer(data[6 : 6 + num_symbols], np.uint8).astype(
+        np.int64
+    )
+    if n == 0 or not lengths.any():
+        return np.zeros(n, np.int64)
+    stream = data[6 + num_symbols :]
+    if n < _TABLE_MIN_N:
+        # The {symbol: (code, len)} dict only exists for the per-symbol
+        # walk; the chunked path works from the canonical ranges alone.
+        return _decode_bitwalk(stream, _canonical_codes(lengths), n)
+    return _decode_chunked(stream, lengths, n)
 
 
 def huffman_size_bytes(codes_arr: np.ndarray, num_symbols: int) -> int:

@@ -81,9 +81,11 @@ def quantization_mse(x: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Bit packing: c-bit codes -> dense uint32 words (what actually crosses the
-# wire before host-side Huffman; also the on-device layout of the Pallas
-# kernel output).
+# Bit packing: c-bit codes -> dense uint32 words. This is the *reference*
+# packing the per-channel Pallas kernel reproduces word-for-word in-kernel
+# (``kernels/quantize/ref.perchannel_pack_ref`` applies it channel-wise);
+# the serving hot path packs on the device and only uses these helpers for
+# oracles and host-side tooling.
 # ---------------------------------------------------------------------------
 
 

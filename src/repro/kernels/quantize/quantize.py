@@ -2,19 +2,33 @@
 
 The compute hot-spot the paper optimizes is the edge-side feature
 compression: global min/max -> affine map -> round -> (optionally) nibble
-packing. On TPU we implement it as
+packing. PR 2 ran it as a three-``pallas_call`` chain (minmax -> quantize
+-> pack4) that read the feature map from HBM twice and round-tripped the
+codes a third time for packing. The encode is now **one launch**:
 
-  1. ``minmax_kernel``    — grid-parallel block min/max reduction
-                            (HBM -> VMEM tiles, VPU reductions),
-  2. ``quantize_kernel``  — fused affine-map + round + clip to integer
-                            codes (uint8, or uint16 when bits > 8), with
-                            the (min, max) scalars in SMEM,
-  3. ``pack4_kernel``     — two int4 codes per uint8 along the lane axis,
-  4. ``dequant_cast_kernel``   — fused codes -> float -> target dtype
-     (the cloud-side boundary codec: one launch instead of dequantize +
-     separate cast pass),
-  5. ``unpack4_dequant_kernel``— fused nibble unpack + dequant + cast for
-     the int4 wire format (one launch instead of unpack / dequant / cast).
+  1. ``fused_encode_blocks``   — a single two-phase ``pallas_call`` over a
+     ``(2, B, M // block_m)`` grid. Phase 0 is a hierarchical grid
+     reduction: each step reduces its VMEM tile on the VPU and folds the
+     result into a per-sample ``(B, 2)`` SMEM accumulator that persists
+     across grid steps. Phase 1 re-streams the same tiles through the
+     fused affine-map + round + clip (+ nibble pack for bits <= 4) body —
+     codes never touch HBM between the affine map and the pack.
+  2. ``fused_decode_blocks``   — the symmetric cloud half: (nibble unpack
+     +) dequant + cast in one launch, batched over a leading sample axis
+     with per-sample ``(min, step)`` scalars.
+  3. ``pc_encode_blocks`` / ``pc_decode_blocks`` — the per-channel codec
+     on the same fused bodies: per-channel ``(min, scale)`` *vectors* as
+     kernel operands and an in-kernel c-bit pack to dense uint32 words
+     (``32 // c`` codes per word), batched the same way.
+
+Every kernel carries a leading batch axis, so one launch encodes/decodes
+a stack of B boundary tensors (the serving pipeline's micro-batched edge
+encode) with per-sample scalars/vectors selected by the grid index map.
+
+The PR 2 three-launch chain (``minmax_blocks`` -> ``quantize_blocks`` ->
+``pack4_blocks``) is kept verbatim below as the *reference path*: tests
+pin the fused kernel's output byte-for-byte against it, and
+``benchmarks/codec.py`` asserts the fused path is strictly faster.
 
 Tiles are (block_m, 128)-shaped: the trailing 128 matches the VPU lane
 width; block_m is a multiple of 8 (f32 sublane) chosen so a tile fits
@@ -32,13 +46,378 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
-DEFAULT_BLOCK_M = 256
+# (block_m, 128) f32 tiles: 2048 rows = 1 MiB per tile — still comfortable
+# in ~16 MB VMEM with double buffering, and 8x fewer grid steps than the
+# PR 2 default of 256 (each grid step costs a dispatch on TPU and a full
+# buffer pass in interpret mode, so coarse tiles win on both targets).
+DEFAULT_BLOCK_M = 2048
+# Per-channel kernels tile (cb channels) x (chunk elements); chunk is up
+# to PC_CHUNK pack-aligned lane groups long and cb is sized to keep one
+# tile under PC_TILE_BYTES of f32.
+PC_CHUNK = 8
+PC_TILE_BYTES = 1 << 20
+
+# pallas_call sites executed (incremented at trace/eager-dispatch time by
+# every launcher below). ``benchmarks/codec.py`` reads it through
+# ``ops.count_launches`` to report launches-per-encode for each codec path.
+LAUNCH_COUNT = 0
+
+
+def _launched() -> None:
+    global LAUNCH_COUNT
+    LAUNCH_COUNT += 1
+
+
+def code_dtype(bits: int):
+    """Narrowest unsigned integer dtype that holds a c-bit code."""
+    return jnp.uint8 if bits <= 8 else jnp.uint16
 
 
 # ---------------------------------------------------------------------------
-# Pass 1: block min/max
+# Fused single-launch edge encode (batched): hierarchical min/max reduction
+# feeding quantize (+ pack4) in one pallas_call
+# ---------------------------------------------------------------------------
+
+
+# Whole-batch tile budget, in (sublane) rows: below this the entire
+# (B, M, 128) stack is one VMEM tile per phase — f32 4096 x 128 = 2 MiB —
+# and the grid collapses to (2, 1, 1).
+WHOLE_TILE_ROWS = 4096
+
+
+def _pack_lanes(q: jnp.ndarray, bits: int, out_dtype) -> jnp.ndarray:
+    """Fused tail of the encode body: round-tripped nowhere — codes go
+    straight from the affine map to nibble pairs (bits <= 4) or a cast."""
+    if bits <= 4:
+        qq = q.astype(jnp.uint8)
+        return qq[..., 0::2] | (qq[..., 1::2] << 4)
+    return q.astype(out_dtype)
+
+
+def _fused_encode_whole_kernel(x_ref, out_ref, mn_ref, mx_ref,
+                               *, bits: int):
+    """Whole-batch variant: one (B, M, 128) tile per phase, per-sample
+    (min, max) vectors accumulated directly in the revisited range
+    outputs (their constant index map keeps them resident in VMEM across
+    the whole two-step grid)."""
+    p = pl.program_id(0)
+    blk = x_ref[...].astype(jnp.float32)
+    levels = float((1 << bits) - 1)
+
+    @pl.when(p == 0)
+    def _reduce():
+        mn_ref[:, 0] = jnp.min(blk, axis=(1, 2))
+        mx_ref[:, 0] = jnp.max(blk, axis=(1, 2))
+
+    @pl.when(p == 1)
+    def _quantize():
+        mn = mn_ref[:, 0][:, None, None]
+        mx = mx_ref[:, 0][:, None, None]
+        scale = jnp.where(mx > mn, levels / (mx - mn), 0.0)
+        q = jnp.clip(jnp.round((blk - mn) * scale), 0.0, levels)
+        out_ref[...] = _pack_lanes(q, bits, out_ref.dtype)
+
+
+def _fused_encode_kernel(x_ref, out_ref, mn_ref, mx_ref, acc_ref,
+                         *, bits: int):
+    """Blocked variant (large stacks): two-phase grid — p=0 reduces
+    min/max into the SMEM accumulator, p=1 quantizes (+ packs) against
+    the finished per-sample scalars."""
+    p = pl.program_id(0)
+    b = pl.program_id(1)
+    i = pl.program_id(2)
+    blk = x_ref[...][0].astype(jnp.float32)
+    levels = float((1 << bits) - 1)
+
+    @pl.when(p == 0)
+    def _reduce():
+        bmin = jnp.min(blk)
+        bmax = jnp.max(blk)
+
+        @pl.when(i == 0)
+        def _init():
+            acc_ref[b, 0] = bmin
+            acc_ref[b, 1] = bmax
+
+        @pl.when(i > 0)
+        def _fold():
+            acc_ref[b, 0] = jnp.minimum(acc_ref[b, 0], bmin)
+            acc_ref[b, 1] = jnp.maximum(acc_ref[b, 1], bmax)
+
+    @pl.when(p == 1)
+    def _quantize():
+        mn = acc_ref[b, 0]
+        mx = acc_ref[b, 1]
+
+        @pl.when(i == 0)
+        def _emit_range():
+            mn_ref[0, 0] = mn
+            mx_ref[0, 0] = mx
+
+        scale = jnp.where(mx > mn, levels / (mx - mn), 0.0)
+        q = jnp.clip(jnp.round((blk - mn) * scale), 0.0, levels)
+        out_ref[...] = _pack_lanes(q, bits, out_ref.dtype)[None]
+
+
+def fused_encode_blocks(x3d: jnp.ndarray, bits: int, block_m: int,
+                        *, interpret: bool
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One launch: (B, M, 128) tiles -> (codes (B, M, W), mn (B,), mx (B,)).
+
+    W is 64 (two int4 codes per byte) when bits <= 4, else 128. The
+    leading grid axis is the phase: the input streams through the kernel
+    twice (hierarchical min/max reduction pass, then the fused quantize +
+    pack map pass) inside a single pallas_call, with the per-sample
+    (min, max) carried between phases on-chip — codes never touch HBM
+    between the affine map and the pack.
+
+    Stacks up to ``WHOLE_TILE_ROWS`` total rows run as one (B, M, 128)
+    tile per phase (grid (2, 1, 1)), the per-sample ranges living in the
+    revisited (B, 1) output blocks. Larger stacks tile (block_m, 128) per
+    sample with an SMEM scratch accumulator; their codes output pins
+    block (0, 0, 0) during phase 0 and is rewritten by phase 1's first
+    step, so the extra flush is free.
+    """
+    bsz, m, n = x3d.shape
+    pack = bits <= 4
+    out_n = n // 2 if pack else n
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, m, out_n), code_dtype(bits)),
+        jax.ShapeDtypeStruct((bsz, 1), jnp.float32),
+        jax.ShapeDtypeStruct((bsz, 1), jnp.float32),
+    ]
+    _launched()
+    if bsz * m <= WHOLE_TILE_ROWS:
+        codes, mn, mx = pl.pallas_call(
+            functools.partial(_fused_encode_whole_kernel, bits=bits),
+            grid=(2,),
+            in_specs=[pl.BlockSpec((bsz, m, n), lambda p: (0, 0, 0))],
+            out_specs=[
+                pl.BlockSpec((bsz, m, out_n), lambda p: (0, 0, 0)),
+                pl.BlockSpec((bsz, 1), lambda p: (0, 0)),
+                pl.BlockSpec((bsz, 1), lambda p: (0, 0)),
+            ],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x3d)
+        return codes, mn[:, 0], mx[:, 0]
+    grid = (2, bsz, m // block_m)
+    codes, mn, mx = pl.pallas_call(
+        functools.partial(_fused_encode_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block_m, n), lambda p, b, i: (b, i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block_m, out_n),
+                         lambda p, b, i: (p * b, p * i, 0)),
+            pl.BlockSpec((1, 1), lambda p, b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda p, b, i: (b, 0)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.SMEM((bsz, 2), jnp.float32)],
+        interpret=interpret,
+    )(x3d)
+    return codes, mn[:, 0], mx[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fused cloud-side decode (batched): (unpack) + dequantize + cast
+# ---------------------------------------------------------------------------
+
+
+def _fused_decode_kernel(mn_ref, step_ref, q_ref, out_ref, *, packed: bool):
+    mn = mn_ref[0, 0]
+    step = step_ref[0, 0]
+    q = q_ref[...][0]
+    if packed:
+        lo = (q & 0x0F).astype(jnp.float32)
+        hi = (q >> 4).astype(jnp.float32)
+        # Interleave the two nibble streams back to lane order
+        # [lo0, hi0, ...] (the inverse of the pack's even/odd split).
+        m, half = q.shape
+        codes = jnp.stack([lo, hi], axis=-1).reshape(m, half * 2)
+    else:
+        codes = q.astype(jnp.float32)
+    out_ref[...] = ((codes * step + mn)[None]).astype(out_ref.dtype)
+
+
+def fused_decode_blocks(q3d: jnp.ndarray, mn, mx, bits: int, block_m: int,
+                        out_dtype, *, packed: bool, interpret: bool
+                        ) -> jnp.ndarray:
+    """One pallas_call for the whole cloud-side boundary codec, batched.
+
+    ``q3d`` is (B, M, W): one uint8/uint16 code per element, or two int4
+    codes per byte (pack layout) when ``packed``. ``mn``/``mx`` are (B,)
+    per-sample scalars, routed to each grid step through a (1, 1) block —
+    the scalar-operand layout Pallas maps to SMEM.
+    """
+    bsz, m, n = q3d.shape
+    levels = float((1 << bits) - 1)
+    mn = jnp.reshape(mn.astype(jnp.float32), (bsz, 1))
+    mx = jnp.reshape(mx.astype(jnp.float32), (bsz, 1))
+    step = jnp.where(levels > 0, (mx - mn) / levels, 0.0).astype(jnp.float32)
+    out_n = n * 2 if packed else n
+    grid = (bsz, m // block_m)
+    _launched()
+    return pl.pallas_call(
+        functools.partial(_fused_decode_kernel, packed=packed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, block_m, n), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, out_n), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, out_n), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )(mn, step, q3d)
+
+
+# ---------------------------------------------------------------------------
+# Per-channel codec on the same fused bodies: vector (min, scale) operands
+# + in-kernel c-bit packing to uint32 words
+# ---------------------------------------------------------------------------
+
+
+def pc_tiling(c: int, length: int, bits: int):
+    """Static tile plan for the per-channel kernels: channels pad to a
+    sublane multiple and block ``cb`` at a time; the length axis packs in
+    ``chunk``-element blocks (a multiple of ``per_word * LANES`` so a
+    block of codes packs to whole 128-lane word rows). ``cb`` is sized to
+    keep one f32 tile under ``PC_TILE_BYTES``. Returns
+    (per_word, chunk, l_pad, c_pad, cb)."""
+    per_word = 32 // bits
+    base = per_word * LANES
+    chunk = base * min(PC_CHUNK, max((length + base - 1) // base, 1))
+    l_pad = max((length + chunk - 1) // chunk, 1) * chunk
+    c_pad = max((c + 7) // 8 * 8, 8)
+    cb = min(c_pad, max(8, PC_TILE_BYTES // (chunk * 4) // 8 * 8))
+    c_pad = (c_pad + cb - 1) // cb * cb
+    return per_word, chunk, l_pad, c_pad, cb
+
+
+def _pc_encode_kernel(mn_ref, scale_ref, x_ref, out_ref,
+                      *, bits: int, per_word: int, n_per_ch: int,
+                      chunk: int):
+    i = pl.program_id(2)
+    mn = mn_ref[...][0][:, None]          # (cb, 1) per-channel vectors
+    scale = scale_ref[...][0][:, None]
+    blk = x_ref[...][0].astype(jnp.float32)    # (cb, chunk)
+    levels = float((1 << bits) - 1)
+    q = jnp.clip(jnp.round((blk - mn) * scale), 0.0, levels)
+    # Zero the codes past the channel's true length so the final partial
+    # word matches a zero-padded reference pack bit-for-bit.
+    pos = i * chunk + jax.lax.broadcasted_iota(jnp.int32, blk.shape, 1)
+    q = jnp.where(pos < n_per_ch, q, 0.0)
+    qi = q.astype(jnp.uint32)
+    w = qi[:, 0::per_word]
+    for k in range(1, per_word):
+        w = w | (qi[:, k::per_word] << (k * bits))
+    out_ref[...] = w[None]
+
+
+def pc_encode_blocks(xc: jnp.ndarray, mn2d: jnp.ndarray, mx2d: jnp.ndarray,
+                     bits: int, *, interpret: bool) -> jnp.ndarray:
+    """Fused per-channel quantize + c-bit pack, one launch.
+
+    ``xc`` is (B, C, L) channel-major features; ``mn2d``/``mx2d`` are the
+    (B, C) per-channel range vectors, fed to the kernel as (cb,) vector
+    blocks. Returns (B, C, l_pad // per_word) uint32 words — ``32 //
+    bits`` codes per word, codes never straddling a word, channels never
+    sharing a word.
+    """
+    bsz, c, length = xc.shape
+    per_word, chunk, l_pad, c_pad, cb = pc_tiling(c, length, bits)
+    xc = jnp.pad(xc, ((0, 0), (0, c_pad - c), (0, l_pad - length)))
+    levels = float((1 << bits) - 1)
+    mn2d = mn2d.astype(jnp.float32)
+    scale = jnp.where(mx2d > mn2d, levels / (mx2d - mn2d), 0.0)
+    scale = jnp.pad(scale.astype(jnp.float32), ((0, 0), (0, c_pad - c)))
+    mn2d = jnp.pad(mn2d, ((0, 0), (0, c_pad - c)))
+    grid = (bsz, c_pad // cb, l_pad // chunk)
+    kernel = functools.partial(
+        _pc_encode_kernel, bits=bits, per_word=per_word,
+        n_per_ch=length, chunk=chunk,
+    )
+    _launched()
+    words = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cb), lambda b, c_, i: (b, c_)),
+            pl.BlockSpec((1, cb), lambda b, c_, i: (b, c_)),
+            pl.BlockSpec((1, cb, chunk), lambda b, c_, i: (b, c_, i)),
+        ],
+        out_specs=pl.BlockSpec((1, cb, chunk // per_word),
+                               lambda b, c_, i: (b, c_, i)),
+        out_shape=jax.ShapeDtypeStruct(
+            (bsz, c_pad, l_pad // per_word), jnp.uint32
+        ),
+        interpret=interpret,
+    )(mn2d, scale, xc)
+    return words[:, :c]
+
+
+def _pc_decode_kernel(mn_ref, step_ref, w_ref, out_ref,
+                      *, bits: int, per_word: int):
+    mn = mn_ref[...][0][:, None]
+    step = step_ref[...][0][:, None]
+    w = w_ref[...][0]                      # (cb, wchunk) uint32
+    mask = jnp.uint32((1 << bits) - 1)
+    parts = [((w >> (k * bits)) & mask).astype(jnp.float32)
+             for k in range(per_word)]
+    cb, wn = w.shape
+    codes = jnp.stack(parts, axis=-1).reshape(cb, wn * per_word)
+    out_ref[...] = ((codes * step + mn)[None]).astype(out_ref.dtype)
+
+
+def pc_decode_blocks(w3d: jnp.ndarray, mn2d: jnp.ndarray, mx2d: jnp.ndarray,
+                     bits: int, length: int, out_dtype, *, interpret: bool
+                     ) -> jnp.ndarray:
+    """Fused per-channel unpack + dequant + cast, one launch.
+
+    Inverse of :func:`pc_encode_blocks`: (B, C, W) uint32 wire words ->
+    (B, C, l_pad) dequantized activations in ``out_dtype`` (trailing axis
+    padded to the tile plan; callers trim to ``length``).
+    """
+    bsz, c, w_true = w3d.shape
+    per_word, chunk, l_pad, c_pad, cb = pc_tiling(c, length, bits)
+    wchunk = chunk // per_word
+    w_pad = l_pad // per_word
+    w3d = jnp.pad(w3d, ((0, 0), (0, c_pad - c), (0, w_pad - w_true)))
+    levels = float((1 << bits) - 1)
+    mn2d = mn2d.astype(jnp.float32)
+    mx2d = mx2d.astype(jnp.float32)
+    step = jnp.where(levels > 0, (mx2d - mn2d) / levels, 0.0)
+    step = jnp.pad(step.astype(jnp.float32), ((0, 0), (0, c_pad - c)))
+    mn2d = jnp.pad(mn2d, ((0, 0), (0, c_pad - c)))
+    grid = (bsz, c_pad // cb, w_pad // wchunk)
+    kernel = functools.partial(_pc_decode_kernel, bits=bits,
+                               per_word=per_word)
+    _launched()
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cb), lambda b, c_, i: (b, c_)),
+            pl.BlockSpec((1, cb), lambda b, c_, i: (b, c_)),
+            pl.BlockSpec((1, cb, wchunk), lambda b, c_, i: (b, c_, i)),
+        ],
+        out_specs=pl.BlockSpec((1, cb, wchunk * per_word),
+                               lambda b, c_, i: (b, c_, i)),
+        out_shape=jax.ShapeDtypeStruct(
+            (bsz, c_pad, l_pad), jnp.dtype(out_dtype)
+        ),
+        interpret=interpret,
+    )(mn2d, step, w3d)
+    return out[:, :c]
+
+
+# ---------------------------------------------------------------------------
+# PR 2 three-launch reference path (kept: byte-identity pins + benchmark
+# baseline for the fused kernel)
 # ---------------------------------------------------------------------------
 
 
@@ -52,6 +431,7 @@ def minmax_blocks(x2d: jnp.ndarray, block_m: int, *, interpret: bool
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     m, n = x2d.shape
     grid = (m // block_m,)
+    _launched()
     mn, mx = pl.pallas_call(
         _minmax_kernel,
         grid=grid,
@@ -69,11 +449,6 @@ def minmax_blocks(x2d: jnp.ndarray, block_m: int, *, interpret: bool
     return jnp.min(mn), jnp.max(mx)
 
 
-# ---------------------------------------------------------------------------
-# Pass 2: affine quantization to uint8 codes
-# ---------------------------------------------------------------------------
-
-
 def _quantize_kernel(mn_ref, scale_ref, x_ref, out_ref):
     mn = mn_ref[0]
     scale = scale_ref[0]
@@ -84,11 +459,6 @@ def _quantize_kernel(mn_ref, scale_ref, x_ref, out_ref):
     out_ref[...] = q.astype(out_ref.dtype)
 
 
-def code_dtype(bits: int):
-    """Narrowest unsigned integer dtype that holds a c-bit code."""
-    return jnp.uint8 if bits <= 8 else jnp.uint16
-
-
 def quantize_blocks(x2d, mn, mx, bits, block_m, *, interpret):
     m, n = x2d.shape
     levels = float((1 << bits) - 1)
@@ -96,6 +466,7 @@ def quantize_blocks(x2d, mn, mx, bits, block_m, *, interpret):
     mn_arr = jnp.reshape(mn.astype(jnp.float32), (1,))
     sc_arr = jnp.stack([scale, jnp.float32(levels)])
     grid = (m // block_m,)
+    _launched()
     return pl.pallas_call(
         _quantize_kernel,
         grid=grid,
@@ -110,11 +481,6 @@ def quantize_blocks(x2d, mn, mx, bits, block_m, *, interpret):
     )(mn_arr, sc_arr, x2d)
 
 
-# ---------------------------------------------------------------------------
-# Pass 3 (optional, c <= 4): nibble packing along lanes
-# ---------------------------------------------------------------------------
-
-
 def _pack4_kernel(q_ref, out_ref):
     q = q_ref[...].astype(jnp.uint8)
     lo = q[:, 0::2]
@@ -126,6 +492,7 @@ def pack4_blocks(q2d: jnp.ndarray, block_m: int, *, interpret: bool
                  ) -> jnp.ndarray:
     m, n = q2d.shape
     grid = (m // block_m,)
+    _launched()
     return pl.pallas_call(
         _pack4_kernel,
         grid=grid,
@@ -134,61 +501,3 @@ def pack4_blocks(q2d: jnp.ndarray, block_m: int, *, interpret: bool
         out_shape=jax.ShapeDtypeStruct((m, n // 2), jnp.uint8),
         interpret=interpret,
     )(q2d)
-
-
-# ---------------------------------------------------------------------------
-# Fused cloud-side codec: (unpack) + dequantize + cast in one launch
-# ---------------------------------------------------------------------------
-
-
-def _dequant_cast_kernel(mn_ref, step_ref, q_ref, out_ref):
-    mn = mn_ref[0]
-    step = step_ref[0]
-    q = q_ref[...].astype(jnp.float32)
-    out_ref[...] = (q * step + mn).astype(out_ref.dtype)
-
-
-def _unpack4_dequant_kernel(mn_ref, step_ref, p_ref, out_ref):
-    mn = mn_ref[0]
-    step = step_ref[0]
-    p = p_ref[...]
-    lo = (p & 0x0F).astype(jnp.float32)
-    hi = (p >> 4).astype(jnp.float32)
-    # Interleave the two nibble streams back to lane order [lo0, hi0, ...]
-    # (the inverse of pack4's even/odd split).
-    m, half = p.shape
-    codes = jnp.stack([lo, hi], axis=-1).reshape(m, half * 2)
-    out_ref[...] = (codes * step + mn).astype(out_ref.dtype)
-
-
-def fused_dequant_blocks(q2d: jnp.ndarray, mn, mx, bits: int, block_m: int,
-                         out_dtype, *, packed: bool, interpret: bool
-                         ) -> jnp.ndarray:
-    """One ``pallas_call`` for the whole cloud-side boundary codec.
-
-    ``packed=False``: q2d holds one uint8 code per element.
-    ``packed=True``:  q2d holds two int4 codes per byte (pack4 layout); the
-    output has twice as many lanes as the input.
-    """
-    m, n = q2d.shape
-    levels = float((1 << bits) - 1)
-    step = jnp.where(levels > 0, (mx - mn) / levels, 0.0).astype(jnp.float32)
-    out_n = n * 2 if packed else n
-    grid = (m // block_m,)
-    kernel = _unpack4_dequant_kernel if packed else _dequant_cast_kernel
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1,), lambda i: (0,)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-            pl.BlockSpec((block_m, n), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_m, out_n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, out_n), jnp.dtype(out_dtype)),
-        interpret=interpret,
-    )(
-        jnp.reshape(mn.astype(jnp.float32), (1,)),
-        jnp.reshape(step, (1,)),
-        q2d,
-    )

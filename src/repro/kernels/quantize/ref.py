@@ -37,5 +37,26 @@ def pack4_ref(codes: jnp.ndarray) -> jnp.ndarray:
     return u[..., 0::2] | (u[..., 1::2] << 4)
 
 
+def perchannel_quantize_ref(x: jnp.ndarray, bits: int, axis: int
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-channel oracle: (int codes, min (C,), max (C,))."""
+    quantized = q.quantize(x, bits, axis=axis)
+    return quantized.values, quantized.x_min, quantized.x_max
+
+
+def perchannel_pack_ref(x: jnp.ndarray, bits: int, axis: int) -> jnp.ndarray:
+    """Channel-major c-bit packing oracle for the fused per-channel encode
+    kernel: each channel's flattened codes packed independently into
+    ``ceil(L / (32 // bits))`` uint32 words (``pack_bits`` per channel)."""
+    codes, _, _ = perchannel_quantize_ref(x, bits, axis)
+    cm = jnp.moveaxis(codes, axis, 0).reshape(codes.shape[axis], -1)
+    return jnp.stack([q.pack_bits(row, bits) for row in cm])
+
+
+def perchannel_dequantize_ref(x: jnp.ndarray, bits: int, axis: int
+                              ) -> jnp.ndarray:
+    return q.quantize_dequantize(x, bits, axis=axis)
+
+
 def quantize_dequantize_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     return q.quantize_dequantize(x, bits)

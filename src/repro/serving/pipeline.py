@@ -30,6 +30,16 @@ and a re-decoupling listener pre-builds the new runner off the critical
 path. A bandwidth step-change therefore moves the cut within a few
 requests, while requests already in flight complete under their old plan
 — the edge and cloud halves never disagree about a given request.
+
+The edge stage is **micro-batched**: it drains up to ``micro_batch``
+queued requests per iteration, decides a plan for each (same decision
+sequence as unbatched serving), and encodes every run of consecutive
+same-plan requests through one batched codec launch
+(``DecoupledRunner.edge_step_batch``) — amortizing the per-request kernel
+dispatch overhead on the hottest path. Blobs are byte-identical to the
+per-request path and the simulated-clock accounting still charges each
+request its own modeled edge time, so throughput/latency metrics are
+unchanged by the batching.
 """
 from __future__ import annotations
 
@@ -102,6 +112,9 @@ class PipelinedEdgeCloudServer:
     params: Any
     controller: Optional[AdaptationController] = None
     runners: Optional[RunnerCache] = None
+    # Max queued requests the edge stage drains into one batched encode
+    # launch (1 = per-request encode, the pre-micro-batching behaviour).
+    micro_batch: int = 4
     adaptation_log: List[Tuple[float, AdaptationEvent]] = field(
         default_factory=list
     )
@@ -145,28 +158,67 @@ class PipelinedEdgeCloudServer:
                 out_q.put(_SHUTDOWN)
 
     # ------------------------------------------------------------- stages
+    def _drain_group(self, first: "PipelineRequest"):
+        """Drain up to ``micro_batch`` queued requests without blocking.
+        Returns (group, saw_shutdown)."""
+        group = [first]
+        while len(group) < max(self.micro_batch, 1):
+            try:
+                nxt = self._edge_q.get_nowait()
+            except queue.Empty:
+                break
+            if nxt is _SHUTDOWN:
+                return group, True
+            group.append(nxt)
+        return group, False
+
     def _edge_worker(self) -> None:
         lat = self.engine.latency
-        while True:
+        shutdown = False
+        while not shutdown:
             req = self._edge_q.get()
             if req is _SHUTDOWN:
-                self._link_q.put(_SHUTDOWN)
-                return
-            plan = self.controller.current_plan()
-            req.plan = plan
-            tl = req.timeline
-            tl.arrival_s = req.arrival_s
-            if plan.is_cloud_only:
-                edge_t = 0.0           # raw input ships straight to the link
-                req._blob = None
-            else:
-                runner = self.runners.get(plan)
-                req._blob, req._extras = runner.edge_step(req.batch)
-                edge_t = float(lat.edge_times()[plan.point])
-            tl.edge_start = max(req.arrival_s, self._edge_free)
-            tl.edge_end = tl.edge_start + edge_t
-            self._edge_free = tl.edge_end
-            self._link_q.put(req)
+                break
+            group, shutdown = self._drain_group(req)
+            # Per-request plan decisions — the same decision sequence the
+            # unbatched edge stage would make.
+            for r in group:
+                r.plan = self.controller.current_plan()
+                r.timeline.arrival_s = r.arrival_s
+            # Encode each run of consecutive same-plan requests in one
+            # batched codec launch (current_plan returns the identical
+            # plan object while no re-decoupling fires).
+            i = 0
+            while i < len(group):
+                r = group[i]
+                if r.plan.is_cloud_only:
+                    r._blob = None     # raw input ships straight to the link
+                    i += 1
+                    continue
+                j = i + 1
+                while j < len(group) and group[j].plan is r.plan:
+                    j += 1
+                run = group[i:j]
+                runner = self.runners.get(r.plan)
+                if len(run) == 1:
+                    results = [runner.edge_step(r.batch)]
+                else:
+                    results = runner.edge_step_batch([g.batch for g in run])
+                for g, (blob, extras) in zip(run, results):
+                    g._blob, g._extras = blob, extras
+                i = j
+            # Simulated-clock accounting + handoff, in arrival order: the
+            # micro-batch amortizes real dispatch overhead but each request
+            # still occupies the modeled edge stage for its own duration.
+            for r in group:
+                tl = r.timeline
+                edge_t = 0.0 if r.plan.is_cloud_only else \
+                    float(lat.edge_times()[r.plan.point])
+                tl.edge_start = max(r.arrival_s, self._edge_free)
+                tl.edge_end = tl.edge_start + edge_t
+                self._edge_free = tl.edge_end
+                self._link_q.put(r)
+        self._link_q.put(_SHUTDOWN)
 
     def _link_worker(self) -> None:
         lat = self.engine.latency

@@ -16,6 +16,14 @@ numerics of each request are *exactly* those of running it alone — the
 continuous-batching output is bit-identical to the synchronous batch-1
 path (greedy), which the tests assert.
 
+Token selection is batched the same way: greedy argmax and temperature
+sampling for **all** active slots run as one device computation per
+engine step (vmapped PRNG split + categorical, masked against each
+slot's temperature) followed by a single device->host transfer — not one
+``int(jnp.argmax(...))`` sync per slot per step. Each sampled slot still
+consumes exactly one split of its own per-request key per token, so
+sampled streams are identical to the per-slot path.
+
 Compile behaviour: the batched decode compiles once (fixed slot count and
 cache length). Prefill compiles per distinct prompt length, as in
 ``ServeSession``.
@@ -76,6 +84,8 @@ class ContinuousBatchingEngine:
         self._decode = jax.jit(
             jax.vmap(self.model.decode_step, in_axes=(None, 0, 0, 0))
         )
+        self._select = jax.jit(self._batched_select)
+        self._dummy_key = jax.random.key(self.cfg.seed)
         one = self.model.init_caches(1, L, 0)
         self._caches = jax.tree.map(
             lambda a: jnp.zeros((n,) + a.shape, a.dtype), one
@@ -113,18 +123,43 @@ class ContinuousBatchingEngine:
         self._slots[slot] = req
         self._keys[slot] = jax.random.key(self.cfg.seed + req.uid)
         self.events.append(("join", self.step_count, req.uid))
-        first = self._select_token(slot, logits[:, -1])
-        self._last = self._last.at[slot, 0, 0].set(first)
-        self._record_token(slot, first)
+        toks_np, toks = self._select_tokens([slot], logits[:, -1])
+        self._last = self._last.at[slot, 0, 0].set(toks[0])
+        self._record_token(slot, int(toks_np[0]))
 
-    def _select_token(self, slot: int, logits_row: jnp.ndarray) -> int:
-        req = self._slots[slot]
-        if req.temperature > 0:
-            self._keys[slot], sub = jax.random.split(self._keys[slot])
-            return int(jax.random.categorical(
-                sub, logits_row[0] / req.temperature
-            ))
-        return int(jnp.argmax(logits_row[0]))
+    @staticmethod
+    def _batched_select(rows: jnp.ndarray, keys, temps: jnp.ndarray):
+        """Next token for a stack of slots in one device computation:
+        rows (k, V) logits, keys (k,) per-slot PRNG keys, temps (k,).
+        Greedy slots take the argmax; sampled slots split their key once
+        (exactly as the per-slot path did) and draw categorically."""
+        split = jax.vmap(jax.random.split)(keys)
+        new_keys, subs = split[:, 0], split[:, 1]
+        greedy = jnp.argmax(rows, axis=-1).astype(jnp.int32)
+        safe_t = jnp.where(temps > 0, temps, 1.0)
+        sampled = jax.vmap(jax.random.categorical)(
+            subs, rows / safe_t[:, None]
+        ).astype(jnp.int32)
+        return jnp.where(temps > 0, sampled, greedy), new_keys
+
+    def _select_tokens(self, slots: List[int], rows: jnp.ndarray
+                       ) -> Tuple[np.ndarray, jnp.ndarray]:
+        """Select the next token for every listed slot: one batched device
+        op, one host transfer. Returns (host tokens, device tokens).
+        Compiles once per distinct active-slot count (bounded by
+        ``max_batch``)."""
+        temps = np.array([self._slots[s].temperature for s in slots],
+                         np.float32)
+        keys = jnp.stack([
+            self._keys[s] if self._keys[s] is not None else self._dummy_key
+            for s in slots
+        ])
+        toks, new_keys = self._select(rows, keys, jnp.asarray(temps))
+        toks_np = np.asarray(toks)          # the step's single host sync
+        for j, s in enumerate(slots):
+            if temps[j] > 0:                # greedy slots never consume RNG
+                self._keys[s] = new_keys[j]
+        return toks_np, toks
 
     def _record_token(self, slot: int, token: int) -> None:
         req = self._slots[slot]
@@ -178,10 +213,13 @@ class ContinuousBatchingEngine:
                 self._caches, new_caches,
             )
             self._pos = jnp.where(mj, self._pos + 1, self._pos)
-            for slot in active:
-                tok = self._select_token(slot, logits[slot, :, -1])
-                self._last = self._last.at[slot, 0, 0].set(tok)
-                self._record_token(slot, tok)
+            # One batched select + one host transfer for all active slots
+            # (the old path synced the host once per slot per step).
+            rows = logits[jnp.asarray(active), 0, -1]
+            toks_np, toks = self._select_tokens(active, rows)
+            self._last = self._last.at[jnp.asarray(active), 0, 0].set(toks)
+            for j, slot in enumerate(active):
+                self._record_token(slot, int(toks_np[j]))
         return self.completed[done_before:]
 
     def run(self) -> List[GenRequest]:

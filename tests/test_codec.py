@@ -108,6 +108,66 @@ def test_huffman_byte_identical_to_legacy_wire_format(bits):
 
 
 @pytest.mark.parametrize("name", CODECS)
+@pytest.mark.parametrize("bits", [3, 5, 6, 12])
+def test_encode_batch_matches_per_tensor(name, bits):
+    """Batched encode/decode must be invisible on the wire: every blob
+    byte-identical to encoding that tensor alone (headers included), and
+    decode_batch bit-identical to per-blob decode."""
+    codec = get_codec(name)
+    shape = (4, 6, 6, 5)
+    xs = [_features(shape, seed=_seed("batch", name, bits, i))
+          for i in range(4)]
+    blobs = codec.encode_batch(xs, bits)
+    assert len(blobs) == len(xs)
+    outs = codec.decode_batch(blobs)
+    for x, blob, out in zip(xs, blobs, outs):
+        single = codec.encode(x, bits)
+        assert blob.payload == single.payload
+        assert blob.shape == single.shape and blob.bits == single.bits
+        np.testing.assert_array_equal(np.asarray(blob.x_min),
+                                      np.asarray(single.x_min))
+        np.testing.assert_array_equal(np.asarray(blob.x_max),
+                                      np.asarray(single.x_max))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(codec.decode(single)))
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(_reference(name, x, bits)))
+
+
+@pytest.mark.parametrize("name", CODECS)
+def test_encode_batch_empty_and_ragged_fall_back(name):
+    """Zero-element stacks and mixed shapes can't share one launch — the
+    batched API must fall back to the per-tensor path, not crash."""
+    codec = get_codec(name)
+    empties = [jnp.zeros((0, 4), jnp.float32) for _ in range(3)]
+    blobs = codec.encode_batch(empties, 8)
+    for blob, out in zip(blobs, codec.decode_batch(blobs)):
+        assert blob.payload == b""
+        assert out.size == 0
+    ragged = [_features((3, 5, 7), seed=1), _features((2, 6, 4), seed=2)]
+    blobs = codec.encode_batch(ragged, 4)
+    for x, blob, out in zip(ragged, blobs, codec.decode_batch(blobs)):
+        assert blob.shape == tuple(x.shape)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(_reference(name, x, 4)))
+
+
+def test_perchannel_payload_is_device_packed():
+    """The perchannel wire is the fused kernel's channel-major c-bit
+    packing (channels never share a word) — pinned against the
+    channel-wise ``pack_bits`` oracle, so a silent fallback to the old
+    host packing (flat tensor order) would be caught here."""
+    from repro.kernels.quantize import ref as kref
+
+    codec = get_codec("perchannel")
+    x = _features((2, 5, 4, 4), seed=21)
+    blob = codec.encode(x, 5)
+    want = np.asarray(kref.perchannel_pack_ref(x, 5, 1)).astype("<u4")
+    assert blob.payload == want.tobytes()
+    assert blob.nbytes == codec.wire_size_bytes(tuple(x.shape), 5)
+
+
+@pytest.mark.parametrize("name", CODECS)
 def test_empty_boundary_roundtrip(name):
     codec = get_codec(name)
     for shape in [(0,), (0, 4), (2, 0, 3, 4)]:

@@ -62,3 +62,43 @@ def test_size_helper_matches_encode():
     est = huffman_size_bytes(codes, 64)
     real = len(huffman_encode(codes, 64))
     assert abs(est - real) <= 64  # header bookkeeping slack
+
+
+def test_chunked_decoder_paths():
+    """The table/chunk-driven decoder (n >= _TABLE_MIN_N) must agree with
+    the per-symbol walk across alphabet sizes, including 16-bit alphabets
+    and streams crossing the fast-path threshold."""
+    from repro.core.entropy import _TABLE_MIN_N
+
+    rng = np.random.default_rng(7)
+    for nsym in (4, 256, 4096, 1 << 16):
+        for n in (_TABLE_MIN_N - 1, _TABLE_MIN_N, 20_000):
+            codes = rng.integers(0, nsym, size=n)
+            blob = huffman_encode(codes, nsym)
+            np.testing.assert_array_equal(
+                huffman_decode(blob).reshape(-1), codes
+            )
+
+
+def test_deep_tree_long_codes():
+    """Fibonacci frequencies build a maximally skewed tree whose longest
+    codes exceed the LUT window — the chunked decoder must resolve those
+    symbols through the per-symbol literal path, in place."""
+    fib = [1, 1]
+    while len(fib) < 24:
+        fib.append(fib[-1] + fib[-2])
+    codes = np.repeat(np.arange(len(fib)), fib)
+    np.random.default_rng(3).shuffle(codes)
+    assert codes.size >= 512               # stays on the chunked path
+    blob = huffman_encode(codes, len(fib))
+    np.testing.assert_array_equal(huffman_decode(blob).reshape(-1), codes)
+
+
+def test_sparse_stream_decode_matches():
+    """ReLU-sparse streams (the serving case): ~90% zeros, short zero
+    code, multiple symbols per chunk lookup."""
+    rng = np.random.default_rng(11)
+    codes = rng.integers(0, 256, size=60_000)
+    codes[rng.random(60_000) < 0.9] = 0
+    blob = huffman_encode(codes, 256)
+    np.testing.assert_array_equal(huffman_decode(blob).reshape(-1), codes)

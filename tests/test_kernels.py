@@ -103,6 +103,112 @@ def test_uint16_codes_bits12(shape):
     np.testing.assert_array_equal(np.asarray(got3), np.asarray(want))
 
 
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 8, 12])
+def test_fused_encode_matches_threelaunch_bytes(bits):
+    """The single-launch fused encode must reproduce the PR 2 three-launch
+    chain byte-for-byte: same packed codes, same (min, max) scalars."""
+    for shape in [(256, 128), (3, 5, 7), (300,), (8,)]:
+        x = _rand(shape, jnp.float32, seed=bits)
+        c1, mn1, mx1 = ops.quantize_pack(x, bits, interpret=True)
+        c0, mn0, mx0 = ops.quantize_pack_threelaunch(x, bits,
+                                                     interpret=True)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c0))
+        assert float(mn1) == float(mn0)
+        assert float(mx1) == float(mx0)
+
+
+def test_fused_encode_is_single_launch():
+    """Launch accounting: the fused edge encode dispatches one pallas_call
+    where the PR 2 chain dispatched three (and the per-channel encode is
+    one as well)."""
+    x = _rand((64, 64), jnp.float32, seed=1)
+    with ops.count_launches() as c:
+        ops.quantize_pack_impl(x, 4, interpret=True)
+    assert c.count == 1
+    with ops.count_launches() as c:
+        ops.quantize_pack_threelaunch_impl(x, 4, interpret=True)
+    assert c.count == 3
+    with ops.count_launches() as c:
+        ops.quantize_pack_batch_impl(jnp.stack([x, x]), 4, interpret=True)
+    assert c.count == 1
+    with ops.count_launches() as c:
+        ops.perchannel_encode_impl(_rand((2, 5, 4, 4), jnp.float32), 4, 1,
+                                   interpret=True)
+    assert c.count == 1
+
+
+@pytest.mark.parametrize("bits", [3, 5, 6, 12])
+def test_batched_encode_decode_matches_single(bits):
+    """One batched launch over B stacked tensors must be bit-identical,
+    per sample, to B single-tensor launches — codes, ranges, and the
+    decoded activations."""
+    shape = (4, 6, 6)
+    xs = [_rand(shape, jnp.float32, seed=100 + i) for i in range(5)]
+    xb = jnp.stack(xs)
+    cb, mnb, mxb = ops.quantize_pack_batch(xb, bits, interpret=True)
+    n = xs[0].size
+    n_wire = (n + 1) // 2 if bits <= 4 else n
+    flat = jnp.stack([cb[i].reshape(-1)[:n_wire] for i in range(5)])
+    outb = ops.dequantize_wire_batch(flat, mnb, mxb, bits, shape,
+                                     interpret=True)
+    for i, x in enumerate(xs):
+        c1, mn1, mx1 = ops.quantize_pack(x, bits, interpret=True)
+        np.testing.assert_array_equal(np.asarray(cb[i]), np.asarray(c1))
+        assert float(mnb[i]) == float(mn1)
+        assert float(mxb[i]) == float(mx1)
+        one = ops.dequantize_wire(flat[i], mnb[i], mxb[i], bits, shape,
+                                  interpret=True)
+        np.testing.assert_array_equal(np.asarray(outb[i]), np.asarray(one))
+
+
+def test_batched_empty_input():
+    xb = jnp.zeros((3, 0, 4), jnp.float32)
+    codes, mn, mx = ops.quantize_pack_batch(xb, 8, interpret=True)
+    assert codes.shape[0] == 3
+    np.testing.assert_array_equal(np.asarray(mn), np.zeros(3))
+    out = ops.dequantize_wire_batch(jnp.zeros((3, 0), jnp.uint8), mn, mx,
+                                    8, (0, 4), interpret=True)
+    assert out.shape == (3, 0, 4)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 5, 8, 12])
+@pytest.mark.parametrize("shape,axis", [((2, 5, 4, 4), 1), ((2, 3, 7), 2)])
+def test_perchannel_kernel_matches_ref(bits, shape, axis):
+    """Fused per-channel encode: in-kernel c-bit packing must equal the
+    channel-major ``pack_bits`` oracle word-for-word, and the fused decode
+    must invert it bit-exactly to the per-channel quantize_dequantize."""
+    x = _rand(shape, jnp.float32, seed=11 * bits)
+    words, mn, mx = ops.perchannel_encode(x, bits, axis, interpret=True)
+    want_words = ref.perchannel_pack_ref(x, bits, axis)
+    w_true = ops.perchannel_words(x.size // shape[axis], bits)
+    np.testing.assert_array_equal(np.asarray(words)[:, :w_true],
+                                  np.asarray(want_words))
+    _, want_mn, want_mx = ref.perchannel_quantize_ref(x, bits, axis)
+    np.testing.assert_array_equal(np.asarray(mn), np.asarray(want_mn))
+    out = ops.perchannel_decode(words[:, :w_true], mn, mx, bits, shape,
+                                axis, interpret=True)
+    want = jax.jit(
+        lambda a: ref.perchannel_dequantize_ref(a, bits, axis)
+    )(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_perchannel_batched_matches_single():
+    shape, axis, bits = (3, 6, 5), 2, 5
+    xs = [_rand(shape, jnp.float32, seed=40 + i) for i in range(4)]
+    wb, mnb, mxb = ops.perchannel_encode_batch(jnp.stack(xs), bits, axis,
+                                               interpret=True)
+    outb = ops.perchannel_decode_batch(wb[:, :, :], mnb, mxb, bits, shape,
+                                       axis, interpret=True)
+    for i, x in enumerate(xs):
+        w1, mn1, mx1 = ops.perchannel_encode(x, bits, axis, interpret=True)
+        np.testing.assert_array_equal(np.asarray(wb[i]), np.asarray(w1))
+        np.testing.assert_array_equal(np.asarray(mnb[i]), np.asarray(mn1))
+        one = ops.perchannel_decode(w1, mn1, mx1, bits, shape, axis,
+                                    interpret=True)
+        np.testing.assert_array_equal(np.asarray(outb[i]), np.asarray(one))
+
+
 def test_kernel_under_jit_grad_context():
     """The kernel path must be usable inside larger jitted programs."""
     x = _rand((256, 128), jnp.float32, seed=5)

@@ -185,7 +185,11 @@ def test_adaptation_on_bandwidth_step_change(jalad_setup):
     controller), and the listener hook must fire for it."""
     engine, params, cfg = jalad_setup
     controller = AdaptationController(engine)
-    pipe = PipelinedEdgeCloudServer(engine, params, controller=controller)
+    # micro_batch=1 keeps the per-request plan-decision granularity this
+    # test schedules around (micro-batching coarsens adaptation to one
+    # decision burst per drained group; see the dedicated test below).
+    pipe = PipelinedEdgeCloudServer(engine, params, controller=controller,
+                                    micro_batch=1)
 
     batches = [make_batch(cfg, 4, 0, seed=40 + i) for i in range(10)]
     bws = [10e6] * 3 + [20e3] * 7          # step change after request 3
@@ -205,3 +209,77 @@ def test_adaptation_on_bandwidth_step_change(jalad_setup):
     assert len(pipe.adaptation_log) == len(controller.history)
     # after the switch the transfers shrink (edge-biased, fewer bits)
     assert done[-1].timeline.bytes_sent <= done[0].timeline.bytes_sent
+
+
+def test_microbatched_edge_numerics_match_synchronous(jalad_setup):
+    """The micro-batched edge stage (one batched codec launch per drained
+    group) must be invisible in the results: same plans, same logits, and
+    the same simulated-clock accounting as the synchronous server."""
+    engine, params, cfg = jalad_setup
+    bw = 1e6
+    batches = [make_batch(cfg, 4, 0, seed=70 + i) for i in range(5)]
+
+    sync = EdgeCloudServer(engine, params)
+    sync.controller.observe_transfer(bw, 1.0)
+    sync_out = [sync.serve_batch(dict(b), bandwidth=bw) for b in batches]
+
+    pipe = PipelinedEdgeCloudServer(engine, params, micro_batch=4)
+    pipe.controller.observe_transfer(bw, 1.0)
+    done = pipe.serve([PipelineRequest(uid=i, batch=dict(b), bandwidth=bw)
+                       for i, b in enumerate(batches)])
+    assert len(done) == 5
+    by_uid = {r.uid: r for r in done}
+    for i, (logits_sync, bd) in enumerate(sync_out):
+        r = by_uid[i]
+        assert (r.timeline.plan_point, r.timeline.plan_bits) == \
+            (bd.plan_point, bd.plan_bits)
+        assert r.timeline.bytes_sent == bd.bytes_sent
+        np.testing.assert_allclose(
+            np.asarray(r.logits, np.float32),
+            np.asarray(logits_sync, np.float32),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_adaptation_fires_under_microbatching(jalad_setup):
+    """Micro-batching coarsens re-decoupling to one decision burst per
+    drained group, but a sustained bandwidth collapse must still move the
+    plan within a few groups."""
+    engine, params, cfg = jalad_setup
+    controller = AdaptationController(engine)
+    pipe = PipelinedEdgeCloudServer(engine, params, controller=controller,
+                                    micro_batch=4)
+    n = 16
+    batches = [make_batch(cfg, 4, 0, seed=90 + i) for i in range(n)]
+    bws = [10e6] * 3 + [20e3] * (n - 3)
+    done = pipe.serve([PipelineRequest(uid=i, batch=b, bandwidth=bw)
+                       for i, (b, bw) in enumerate(zip(batches, bws))])
+    plans = [(r.timeline.plan_point, r.timeline.plan_bits) for r in done]
+    assert len(set(plans)) > 1, f"plan never adapted: {plans}"
+    assert len(controller.history) >= 2
+    assert done[-1].timeline.bytes_sent <= done[0].timeline.bytes_sent
+
+
+def test_microbatched_sync_server_matches_per_request(jalad_setup):
+    """EdgeCloudServer.serve_microbatch: one plan decision + one batched
+    encode launch, per-request results identical to serve_batch."""
+    engine, params, cfg = jalad_setup
+    bw = 1e6
+    batches = [make_batch(cfg, 4, 0, seed=110 + i) for i in range(3)]
+
+    ref_srv = EdgeCloudServer(engine, params)
+    ref_srv.controller.observe_transfer(bw, 1.0)
+    ref_out = [ref_srv.serve_batch(dict(b), bandwidth=bw) for b in batches]
+
+    srv = EdgeCloudServer(engine, params)
+    srv.controller.observe_transfer(bw, 1.0)
+    out = srv.serve_microbatch([dict(b) for b in batches], bandwidth=bw)
+    assert len(out) == 3
+    for (logits, bd), (ref_logits, ref_bd) in zip(out, ref_out):
+        assert (bd.plan_point, bd.plan_bits, bd.bytes_sent) == \
+            (ref_bd.plan_point, ref_bd.plan_bits, ref_bd.bytes_sent)
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(ref_logits, np.float32),
+            rtol=1e-5, atol=1e-5,
+        )
