@@ -1,0 +1,341 @@
+"""Fleet-scale serving benchmark: shared-cloud tail batching + planner
+re-solve speed.
+
+Claims checked by assertion (so ``benchmarks.run`` fails loudly if they
+regress):
+
+1. **Shared-cloud tail batching pays.** With N >= 4 edge devices in
+   flight on the same (point, bits, codec) plan, the shared cloud's one
+   batched wire decode + one concatenated tail forward
+   (``DecoupledRunner.cloud_step_batch(fuse_tail=True)``) beats running
+   the per-request ``cloud_step`` N times by a measured margin — the
+   same dispatch-amortization argument as PR 3's micro-batched edge
+   encode, now on the cloud half (plus real compute batching: one
+   wide-batch tail utilizes the cores far better than N narrow
+   forwards — measured 3.4x at a mid-network cut). Benchmarked on a
+   pinned device-codec plan (mid-network bitpack), because the
+   degenerate case — a host-entropy codec whose decode can't batch, cut
+   at the last layer so there is almost no tail — has nothing to
+   amortize by construction. The bit-exact default mode (batched
+   decode, per-request tails) is timed alongside and must return
+   byte-identical logits.
+
+2. **Planner re-solve is >= 10x faster than rebuilding.** One full
+   adaptation re-decision under a new bandwidth — the candidate solve
+   plus the hysteresis cost of keeping the old plan — through
+   ``PlanSpace.decide`` + ``PlanSpace.plan_cost`` (fused argmin over
+   precomputed operands + an O(1) row lookup) must be at least 10x
+   faster than the pre-planner path, reproduced verbatim: rebuild the
+   ``ILPProblem`` from scratch (cumsum over the FMAC profile, per-point
+   ``exec_time`` python loops for both device vectors, table reshapes,
+   enumeration solve, plan materialization) plus the old
+   ``AdaptationController._plan_cost`` duplicate, which recomputed both
+   uncached latency vectors again. Asserted at the paper-scale decision
+   grid (N=50 points x 16 bit widths x 3 codecs, the ``ilp_solve_time``
+   sizing); the small fleet-engine grid is reported alongside.
+
+Also reports the end-to-end fleet numbers (makespan vs the fully
+sequential sum of service times) for the N-device round-robin stream.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result
+from repro.config import JaladConfig, get_config
+from repro.config.types import EDGE_TK1, EDGE_TX2, DeviceProfile
+from repro.core.decoupler import DecoupledPlan
+from repro.core.ilp import ILPProblem, solve_enumeration
+from repro.core.latency import LatencyModel
+from repro.data.synthetic import make_batch
+from repro.serving.fleet import FleetRequest, build_fleet_server
+
+PROFILES = [
+    EDGE_TX2,
+    EDGE_TK1,
+    DeviceProfile("edge-mid", 1e12, 1.30),
+    DeviceProfile("edge-fast", 4e12, 0.90),
+]
+CLOUD_BATCH_MARGIN = 1.15      # batched cloud must be >= 15% faster
+REPLAN_SPEEDUP_MIN = 10.0      # planner re-solve vs ILPProblem rebuild
+REPEATS = 5
+
+
+def _best_of(fn, repeats=REPEATS):
+    best = np.inf
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _legacy_decide(engine, bw: float):
+    """The pre-planner decision path, reproduced verbatim: every bandwidth
+    drift rebuilt the latency vectors (cumsum + per-point exec_time python
+    loops — a fresh LatencyModel models the old cache-less recompute) and
+    the full ILPProblem, ran the enumeration solve, and materialized the
+    plan from the solution."""
+    lat = engine.latency
+    fresh = LatencyModel(lat.fmacs_per_point, lat.edge, lat.cloud,
+                         lat.input_bytes)
+    rows = engine.point_indices or list(range(len(engine.tables.points)))
+    te = fresh.edge_times()[rows]
+    tc = fresh.cloud_times()[rows]
+    n = engine.tables.size_bytes.shape[0]
+    ttrans = engine.tables.size_bytes.reshape(n, -1) / float(bw)
+    cost = te[:, None] + tc[:, None] + ttrans
+    sol = solve_enumeration(
+        ILPProblem(cost, engine.tables.acc_drop.reshape(n, -1),
+                   engine.cfg.accuracy_drop_budget)
+    )
+    if sol is None:
+        return None
+    rows = engine.point_indices or list(range(len(engine.tables.points)))
+    ci, ki = divmod(sol.bits_index, len(engine.tables.codecs))
+    return DecoupledPlan(
+        point=rows[sol.point],
+        bits=engine.tables.bits_choices[ci],
+        predicted_latency=sol.objective,
+        predicted_acc_drop=float(engine.tables.acc_drop[sol.point, ci, ki]),
+        solve_ms=sol.solve_ms,
+        codec=engine.tables.codecs[ki],
+    )
+
+
+def _legacy_plan_cost(engine, plan, bw: float) -> float:
+    """The deleted ``AdaptationController._plan_cost`` duplicate, verbatim
+    — including the two full latency-vector recomputations it triggered
+    through the old cache-less LatencyModel on every hysteresis check."""
+    lat = engine.latency
+    fresh = LatencyModel(lat.fmacs_per_point, lat.edge, lat.cloud,
+                         lat.input_bytes)
+    if plan.is_cloud_only:
+        return fresh.cloud_only_time(bw)
+    rows = engine.point_indices or list(range(len(engine.tables.points)))
+    row = rows.index(plan.point)
+    c = engine.tables.bits_choices.index(plan.bits)
+    k = engine.tables.codec_index(plan.codec)
+    return (
+        fresh.edge_times()[plan.point]
+        + engine.tables.size_bytes[row, c, k] / bw
+        + fresh.cloud_times()[plan.point]
+    )
+
+
+def _paper_scale_engine():
+    """A decision problem at the paper's sizing (N=50 decoupling points,
+    16 bit widths, 3 codecs — cf. ``benchmarks/ilp_solve_time``): the
+    model is irrelevant to the decision plane, so tables are synthetic."""
+    from repro.config.types import CLOUD_1080TI
+    from repro.core.decoupler import JaladEngine
+    from repro.core.predictor import PredictorTables
+
+    rng = np.random.default_rng(7)
+    n, c, k = 50, 16, 3
+    bits = tuple(range(1, c + 1))
+    codecs = ("huffman", "bitpack", "perchannel")
+    tables = PredictorTables(
+        points=[f"p{i}" for i in range(n)],
+        bits_choices=list(bits),
+        codecs=list(codecs),
+        acc_drop=rng.random((n, c, k)) * 0.3,
+        size_bytes=rng.random((n, c, k)) * 1e6 + 1e3,
+        base_accuracy=0.9,
+    )
+    lat = LatencyModel(rng.random(n) * 2e9 + 1e8, EDGE_TX2, CLOUD_1080TI,
+                       input_bytes=150_528.0)
+    cfg = JaladConfig(bits_choices=bits, codec_choices=codecs,
+                      accuracy_drop_budget=0.15)
+    return JaladEngine(None, tables, lat, cfg)
+
+
+def run(quick: bool = True) -> Dict:
+    n_per_device = 2 if quick else 6
+    cfg = get_config("resnet50").reduced()
+    jc = JaladConfig(bits_choices=(2, 4, 8), accuracy_drop_budget=0.10,
+                     bandwidth_bytes_per_s=1e6)
+    fleet, params = build_fleet_server(
+        cfg, jc, PROFILES, calib_batches=1, calib_batch_size=4)
+    engine = fleet.engine
+    results: Dict = {"devices": [p.name for p in PROFILES]}
+
+    # ---------------------------------------- 1. shared-cloud tail batching
+    # A representative fleet plan: mid-network cut, device-side bitpack
+    # codec — the case the shared cloud worker exists for (substantial
+    # tail, one-launch batched decode). The ILP's own pick at 1 MB/s is
+    # often (last layer, huffman): tiny tail + loop-decoded host codec,
+    # which has nothing to amortize by construction.
+    mid_row = min(4, len(engine.plan_space.point_rows) - 1)
+    plan = DecoupledPlan(engine.plan_space.point_rows[mid_row], 4,
+                         0.0, 0.0, 0.0, codec="bitpack")
+    runner = fleet.runners.get(plan)
+    n_flight = len(PROFILES) * n_per_device
+    blobs = [runner.edge_step(make_batch(cfg, 4, 0, seed=300 + i))[0]
+             for i in range(n_flight)]
+
+    def per_request():
+        outs = [runner.cloud_step(b) for b in blobs]
+        outs[-1].block_until_ready()
+        return outs
+
+    def batched_exact():
+        outs = runner.cloud_step_batch(blobs)
+        outs[-1].block_until_ready()
+        return outs
+
+    def batched_fused():
+        outs = runner.cloud_step_batch(blobs, fuse_tail=True)
+        outs[-1].block_until_ready()
+        return outs
+
+    per_request()                          # warm up (jit all paths)
+    batched_exact()
+    batched_fused()
+    t_loop, ref = _best_of(per_request, repeats=3)
+    t_exact, out_exact = _best_of(batched_exact, repeats=3)
+    t_fused, out_fused = _best_of(batched_fused, repeats=3)
+    for a, b in zip(ref, out_exact):       # exact mode: byte-identical
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(ref, out_fused):       # fused mode: float-equivalent
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+    ratio = t_loop / t_fused
+    results["cloud_batching"] = {
+        "in_flight": n_flight,
+        "plan": [plan.point, plan.bits, plan.codec],
+        "per_request_ms": t_loop * 1e3,
+        "batched_exact_ms": t_exact * 1e3,
+        "batched_fused_ms": t_fused * 1e3,
+        "fused_speedup_x": ratio,
+        "exact_speedup_x": t_loop / t_exact,
+    }
+    print(f"\nShared-cloud tail, {n_flight} in-flight requests on plan "
+          f"(i={plan.point}, c={plan.bits}, {plan.codec})")
+    print(fmt_table(
+        [[f"{t_loop * 1e3:.2f}ms", f"{t_exact * 1e3:.2f}ms",
+          f"{t_fused * 1e3:.2f}ms", f"{ratio:.2f}x"]],
+        [f"{n_flight}x cloud_step", "batched (bit-exact)",
+         "batched (fused tail)", "fused speedup"]))
+    assert ratio >= CLOUD_BATCH_MARGIN, (
+        f"batched shared-cloud tail must be >= {CLOUD_BATCH_MARGIN}x faster "
+        f"than per-request cloud steps at N={len(PROFILES)} devices, got "
+        f"{ratio:.2f}x"
+    )
+
+    # ------------------------------------------- 2. planner re-solve speed
+    rng = np.random.default_rng(0)
+    bws = 10 ** rng.uniform(4.5, 7.5, size=64)
+
+    def _measure_replan(eng):
+        space = eng.plan_space
+
+        def replan_all():
+            # one full adaptation re-decision per drift: candidate solve
+            # + hysteresis cost of keeping the previous plan
+            prev = None
+            out = []
+            for bw in bws:
+                cand = space.decide(bw)
+                if prev is not None:
+                    space.plan_cost(prev, bw)
+                out.append(cand)
+                prev = cand
+            return out
+
+        def rebuild_all():
+            prev = None
+            out = []
+            for bw in bws:
+                cand = _legacy_decide(eng, bw)
+                if prev is not None:
+                    _legacy_plan_cost(eng, prev, bw)
+                out.append(cand)
+                prev = cand
+            return out
+
+        replan_all()                       # warm (PlanSpace already built)
+        rebuild_all()
+        # best-of-9: both sides are sub-ms python loops, so take the least
+        # noisy sample of each to keep the CI assert stable on shared
+        # runners.
+        t_fast, plans = _best_of(replan_all, repeats=9)
+        t_slow, sols = _best_of(rebuild_all, repeats=9)
+        # same decisions, same objectives — the fast path is a pure speedup
+        for p, s in zip(plans, sols):
+            if s is None:
+                assert p.is_cloud_only
+            else:
+                assert p.predicted_latency == s.predicted_latency
+                assert (p.point, p.bits, p.codec) == \
+                    (s.point, s.bits, s.codec)
+        return {
+            "n_points": int(space.edge_vec.shape[0]),
+            "n_choices": space.n_choices,
+            "planner_us_per_solve": t_fast / len(bws) * 1e6,
+            "rebuild_us_per_solve": t_slow / len(bws) * 1e6,
+            "speedup_x": t_slow / t_fast,
+        }
+
+    fleet_replan = _measure_replan(engine)
+    paper_replan = _measure_replan(_paper_scale_engine())
+    results["replan"] = {"n_bandwidths": len(bws),
+                         "fleet_engine": fleet_replan,
+                         "paper_scale": paper_replan}
+    rows = []
+    for label, m in [("fleet engine", fleet_replan),
+                     ("paper scale", paper_replan)]:
+        rows.append([label, f"{m['n_points']}x{m['n_choices']}",
+                     f"{m['planner_us_per_solve']:.1f}us",
+                     f"{m['rebuild_us_per_solve']:.1f}us",
+                     f"{m['speedup_x']:.1f}x"])
+    print(f"\nRe-solve under {len(bws)} bandwidth drifts")
+    print(fmt_table(rows, ["grid", "N x CK", "PlanSpace.decide",
+                           "ILPProblem rebuild", "speedup"]))
+    speedup = paper_replan["speedup_x"]
+    assert speedup >= REPLAN_SPEEDUP_MIN, (
+        f"planner re-solve must be >= {REPLAN_SPEEDUP_MIN}x faster than "
+        f"rebuilding the ILPProblem at paper scale, got {speedup:.1f}x"
+    )
+
+    # ----------------------------------------------- 3. end-to-end stream
+    bws_dev = [1e6, 300e3, 2e6, 600e3]
+    reqs, uid = [], 0
+    for j in range(n_per_device):
+        for d in range(len(PROFILES)):
+            reqs.append(FleetRequest(
+                uid=uid, device_id=d,
+                batch=make_batch(cfg, 4, 0, seed=400 + uid),
+                bandwidth=bws_dev[d]))
+            uid += 1
+    done = fleet.serve(reqs)
+    results["stream"] = {
+        "requests": len(done),
+        "makespan_s": fleet.makespan_s,
+        "sequential_s": fleet.synchronous_time_s(),
+        "batched_cloud_launches": fleet.batched_launches(),
+        "per_device_plans": [
+            [dev.log[-1].plan_point, dev.log[-1].plan_bits,
+             dev.log[-1].plan_codec]
+            for dev in fleet.devices
+        ],
+    }
+    print(f"\nFleet stream: {len(done)} requests over {len(PROFILES)} "
+          f"devices -> makespan {fleet.makespan_s * 1e3:.1f}ms vs "
+          f"sequential {fleet.synchronous_time_s() * 1e3:.1f}ms, "
+          f"{fleet.batched_launches()} batched cloud launches")
+    assert fleet.makespan_s < fleet.synchronous_time_s()
+    assert fleet.batched_launches() >= 1
+
+    path = save_result("fleet", results)
+    print(f"wrote {path}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,7 @@ MODULES = [
     "table3_edge_power",
     "ilp_solve_time",
     "codec",
+    "fleet",
     "pipeline_serving",
     "roofline",
 ]

@@ -34,6 +34,7 @@ from repro.core.ilp import (
     solve_branch_and_bound,
 )
 from repro.core.latency import LatencyModel, PNG_RATIO, JPEG_RATIO
+from repro.core.planner import PlanSpace
 from repro.core.predictor import PredictorTables, build_tables
 from repro.core.decoupler import (
     DecoupledPlan,

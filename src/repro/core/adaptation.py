@@ -8,7 +8,6 @@ plan's predicted latency at the *current* bandwidth by ``switch_margin``.
 """
 from __future__ import annotations
 
-import math
 import threading
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Tuple
@@ -23,8 +22,13 @@ class BandwidthEstimator:
     alpha: float = 0.3
     estimate: Optional[float] = None
 
-    def observe(self, nbytes: float, seconds: float) -> float:
-        sample = nbytes / max(seconds, 1e-9)
+    def observe(self, nbytes: float, seconds: float) -> Optional[float]:
+        if seconds <= 0.0 or nbytes <= 0.0:
+            # A zero/negative duration (clock skew, cached transfer) or an
+            # empty transfer carries no rate information; folding it in
+            # would poison the EWMA with an infinite/garbage sample.
+            return self.estimate
+        sample = nbytes / seconds
         if self.estimate is None:
             self.estimate = sample
         else:
@@ -46,7 +50,11 @@ class AdaptationEvent:
 class AdaptationController:
     engine: JaladEngine
     switch_margin: float = 0.05       # relative latency gain required
-    bw = None                          # current bandwidth estimate
+    # Current bandwidth estimate. NB: the annotation makes this a real
+    # dataclass field (per-instance, in __init__/repr/eq); without it,
+    # ``bw = None`` silently declared a class attribute shared by every
+    # controller.
+    bw: Optional[float] = None
     plan: Optional[DecoupledPlan] = None
     history: List[AdaptationEvent] = field(default_factory=list)
     _estimator: BandwidthEstimator = field(default_factory=BandwidthEstimator)
@@ -69,7 +77,8 @@ class AdaptationController:
         self.history.append(event)
         self.plan = event.new_plan
 
-    def observe_transfer(self, nbytes: float, seconds: float) -> float:
+    def observe_transfer(self, nbytes: float, seconds: float
+                         ) -> Optional[float]:
         with self._lock:
             self.bw = self._estimator.observe(nbytes, seconds)
             return self.bw
@@ -99,23 +108,10 @@ class AdaptationController:
                 candidate.bits == self.plan.bits and \
                 candidate.codec == self.plan.codec:
             return self.plan
-        # Predicted latency of keeping the old plan under the NEW bandwidth.
-        old_cost = self._plan_cost(self.plan, bw)
+        # Predicted latency of keeping the old plan under the NEW bandwidth
+        # — the engine's PlanSpace is the single Z(i,c,k,BW) implementation.
+        old_cost = self.engine.plan_space.plan_cost(self.plan, bw)
         if candidate.predicted_latency < old_cost * (1 - self.switch_margin):
             self._commit(AdaptationEvent(self._step, bw, self.plan,
                                          candidate))
         return self.plan
-
-    def _plan_cost(self, plan: DecoupledPlan, bandwidth: float) -> float:
-        eng = self.engine
-        if plan.is_cloud_only:
-            return eng.latency.cloud_only_time(bandwidth)
-        rows = eng.point_indices or list(range(len(eng.tables.points)))
-        row = rows.index(plan.point)
-        c = eng.tables.bits_choices.index(plan.bits)
-        k = eng.tables.codec_index(plan.codec)
-        return (
-            eng.latency.edge_times()[plan.point]
-            + eng.tables.size_bytes[row, c, k] / bandwidth
-            + eng.latency.cloud_times()[plan.point]
-        )

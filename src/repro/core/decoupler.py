@@ -18,8 +18,9 @@ if TYPE_CHECKING:
     from repro.codec import BoundaryCodec, WireBlob
 
 from repro.config.types import JaladConfig
-from repro.core.ilp import ILPProblem, ILPSolution, solve
+from repro.core.ilp import ILPProblem, solve
 from repro.core.latency import LatencyModel
+from repro.core.planner import PlanSpace
 from repro.core.predictor import PredictorTables
 from repro.core.quantization import quantize_dequantize
 from repro.models.api import Model
@@ -89,6 +90,51 @@ class DecoupledRunner:
             return self._tail(self.params, boundary, self.plan.point, extras)
         return self._tail(self.params, boundary, self.plan.point)
 
+    def cloud_step_batch(self, blobs: List["WireBlob"],
+                         extras_list: Optional[List[Any]] = None,
+                         fuse_tail: bool = False) -> List[Any]:
+        """Batched cloud half, mirroring ``edge_step_batch``: one batched
+        wire decode (``BoundaryCodec.decode_batch``, bit-identical per blob
+        by the codec contract) feeding the tail forwards.
+
+        ``fuse_tail=False`` (default) runs the tails through the SAME
+        jitted per-request callable as ``cloud_step``, so each result is
+        byte-identical to serving the blob alone — the decode batching
+        still collapses B dequant launches into one. ``fuse_tail=True``
+        additionally concatenates the group along the batch axis into ONE
+        tail forward; that is the fastest path but only float-level
+        equivalent (XLA re-blocks matmul/conv reductions per batch size,
+        so bitwise equality across batch shapes is impossible on CPU —
+        measured ~1e-6 relative). Requests carrying ``extras`` or
+        boundaries whose trailing dims differ fall back to the
+        per-request loop."""
+        from repro.codec import get_codec
+
+        if extras_list is None:
+            extras_list = [None] * len(blobs)
+        if not blobs:
+            return []
+        batchable = (
+            len(blobs) > 1
+            and all(e is None for e in extras_list)
+            and len({b.codec for b in blobs}) == 1
+            and len({b.shape[1:] for b in blobs}) == 1
+            and all(len(b.shape) >= 1 for b in blobs)
+        )
+        if not batchable:
+            return [self.cloud_step(b, e)
+                    for b, e in zip(blobs, extras_list)]
+        dtype = jnp.dtype(self.model.cfg.dtype)
+        boundaries = get_codec(blobs[0].codec).decode_batch(
+            blobs, out_dtype=dtype)
+        if not fuse_tail:
+            return [self._tail(self.params, x, self.plan.point)
+                    for x in boundaries]
+        stacked = jnp.concatenate(boundaries, axis=0)
+        logits = self._tail(self.params, stacked, self.plan.point)
+        splits = np.cumsum([b.shape[0] for b in blobs])[:-1]
+        return list(jnp.split(logits, splits, axis=0))
+
     def run(self, batch):
         """Full decoupled inference; returns (logits, transfer_bytes)."""
         blob, extras = self.edge_step(batch)
@@ -132,53 +178,65 @@ def compress_state(caches, bits: int):
 @dataclass
 class JaladEngine:
     """Holds the predictor tables + latency model and answers "where do we
-    cut right now?" for the current bandwidth (paper Sec. III-E)."""
+    cut right now?" for the current bandwidth (paper Sec. III-E).
+
+    All cost math is delegated to one :class:`PlanSpace` (built lazily,
+    cached): the bandwidth-independent parts of the objective are
+    precomputed once, so a re-decision under a new bandwidth is a single
+    fused argmin instead of an ILPProblem rebuild."""
 
     model: Model
     tables: PredictorTables
     latency: LatencyModel
     cfg: JaladConfig
     point_indices: Optional[List[int]] = None   # tables row -> model point
+    _plan_space: Optional[PlanSpace] = field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def plan_space(self) -> PlanSpace:
+        if self._plan_space is None:
+            self._plan_space = PlanSpace.build(
+                self.tables, self.latency, self.cfg.accuracy_drop_budget,
+                self.point_indices,
+            )
+        return self._plan_space
 
     def ilp_problem(self, bandwidth: float) -> ILPProblem:
-        """Build the selection problem over the joint choice axis: the
-        (C, K) bits x codec grid flattens to one column per (c, k) pair,
-        so the ILP picks the wire format along with the cut (Auto-Split
-        style: the compression scheme is a decision variable)."""
-        te = self.latency.edge_times()
-        tc = self.latency.cloud_times()
-        rows = self.point_indices or list(range(len(self.tables.points)))
-        te = te[rows]
-        tc = tc[rows]
-        n = self.tables.size_bytes.shape[0]
-        ttrans = self.tables.size_bytes.reshape(n, -1) / float(bandwidth)
-        cost = te[:, None] + tc[:, None] + ttrans
-        return ILPProblem(cost, self.tables.acc_drop.reshape(n, -1),
-                          self.cfg.accuracy_drop_budget)
+        """The selection problem over the joint choice axis: the (C, K)
+        bits x codec grid flattens to one column per (c, k) pair, so the
+        ILP picks the wire format along with the cut (Auto-Split style:
+        the compression scheme is a decision variable). Materialized from
+        the PlanSpace for the oracle solvers."""
+        return self.plan_space.ilp_problem(bandwidth)
 
     def decide(self, bandwidth: Optional[float] = None,
-               method: str = "enumeration") -> DecoupledPlan:
+               method: str = "planner") -> DecoupledPlan:
+        """Decide (point, bits, codec) at a bandwidth. ``method="planner"``
+        is the fused-argmin fast path; ``"enumeration"``/``"bnb"`` run the
+        cross-checked ILP oracles over the identical cost tables."""
         bw = bandwidth if bandwidth is not None else \
             self.cfg.bandwidth_bytes_per_s
-        problem = self.ilp_problem(bw)
-        sol = solve(problem, method)
+        space = self.plan_space
+        if method == "planner":
+            return space.decide(bw)
+        sol = solve(space.ilp_problem(bw), method)
         if sol is None:
             # Infeasible => fall back to cloud-only (paper's worst case is
             # x_{NC} = 1, i.e. effectively no decoupling).
-            return DecoupledPlan(-1, 0,
-                                 self.latency.cloud_only_time(bw), 0.0, 0.0)
-        rows = self.point_indices or list(range(len(self.tables.points)))
-        ci, ki = divmod(sol.bits_index, len(self.tables.codecs))
-        return DecoupledPlan(
-            point=rows[sol.point],
-            bits=self.tables.bits_choices[ci],
-            predicted_latency=sol.objective,
-            predicted_acc_drop=float(
-                self.tables.acc_drop[sol.point, ci, ki]
-            ),
-            solve_ms=sol.solve_ms,
-            codec=self.tables.codecs[ki],
-        )
+            return space.cloud_only_plan(bw)
+        return space.plan_from_solution(sol)
+
+    def for_edge(self, edge_profile) -> "JaladEngine":
+        """A per-device engine sharing this engine's tables, cloud profile
+        and PlanSpace precomputation — only the edge-time vector differs.
+        The fleet server builds one of these per heterogeneous device."""
+        import dataclasses as _dc
+
+        lat = LatencyModel(self.latency.fmacs_per_point, edge_profile,
+                           self.latency.cloud, self.latency.input_bytes)
+        return _dc.replace(self, latency=lat,
+                           _plan_space=self.plan_space.with_edge(edge_profile))
 
     def make_runner(self, params, plan: DecoupledPlan) -> DecoupledRunner:
         return DecoupledRunner(self.model, params, plan)

@@ -9,8 +9,8 @@ plus the paper's baselines (Origin2Cloud / PNG2Cloud / JPEG2Cloud).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Sequence
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -22,31 +22,67 @@ PNG_RATIO = 0.42
 JPEG_RATIO = 0.10
 
 
+def _freeze(a: np.ndarray) -> np.ndarray:
+    a.flags.writeable = False
+    return a
+
+
 @dataclass
 class LatencyModel:
-    """Latency bookkeeping for one model on one (edge, cloud, BW) setup."""
+    """Latency bookkeeping for one model on one (edge, cloud, BW) setup.
+
+    The cumulative-FMAC profile and the {T_E_i}, {T_C_i} vectors are
+    computed once and cached (read-only): ``edge_times``/``cloud_times``
+    sit on the adaptation hot path, where recomputing ``np.cumsum`` plus a
+    per-point ``exec_time`` python loop on every call dominated re-solve
+    cost. The cached arrays are immutable so callers can share them."""
 
     fmacs_per_point: Sequence[float]     # layer i's own FMACs (batch included)
     edge: DeviceProfile
     cloud: DeviceProfile
     input_bytes: float                   # raw input size (batch included)
+    _cum_fmacs: Optional[np.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
+    _edge_times: Optional[np.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
+    _cloud_times: Optional[np.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------
     @property
     def n_points(self) -> int:
         return len(self.fmacs_per_point)
 
+    @property
+    def cum_fmacs(self) -> np.ndarray:
+        """Cumulative FMACs through each decoupling point (cached)."""
+        if self._cum_fmacs is None:
+            self._cum_fmacs = _freeze(
+                np.cumsum(np.asarray(self.fmacs_per_point, np.float64))
+            )
+        return self._cum_fmacs
+
+    @property
+    def total_fmacs(self) -> float:
+        cum = self.cum_fmacs
+        return float(cum[-1]) if cum.size else 0.0
+
     def edge_times(self) -> np.ndarray:
-        """T_E_i: run layers 1..i on the edge (cumulative)."""
-        cum = np.cumsum(np.asarray(self.fmacs_per_point, np.float64))
-        return np.array([self.edge.exec_time(q) for q in cum])
+        """T_E_i: run layers 1..i on the edge (cumulative, cached)."""
+        if self._edge_times is None:
+            self._edge_times = _freeze(
+                np.array([self.edge.exec_time(q) for q in self.cum_fmacs])
+            )
+        return self._edge_times
 
     def cloud_times(self) -> np.ndarray:
-        """T_C_i: run layers i+1..N on the cloud."""
-        f = np.asarray(self.fmacs_per_point, np.float64)
-        total = f.sum()
-        cum = np.cumsum(f)
-        return np.array([self.cloud.exec_time(total - q) for q in cum])
+        """T_C_i: run layers i+1..N on the cloud (cached)."""
+        if self._cloud_times is None:
+            total = self.total_fmacs
+            self._cloud_times = _freeze(np.array(
+                [self.cloud.exec_time(total - q) for q in self.cum_fmacs]
+            ))
+        return self._cloud_times
 
     def trans_times(self, size_table: np.ndarray, bandwidth: float
                     ) -> np.ndarray:
@@ -59,17 +95,8 @@ class LatencyModel:
         """Upload (possibly image-compressed) input, run everything on the
         cloud. image_ratio=1 -> Origin2Cloud; PNG_RATIO -> PNG2Cloud."""
         upload = self.input_bytes * image_ratio / bandwidth
-        compute = self.cloud.exec_time(float(np.sum(self.fmacs_per_point)))
+        compute = self.cloud.exec_time(self.total_fmacs)
         return upload + compute
 
     def edge_only_time(self) -> float:
-        return self.edge.exec_time(float(np.sum(self.fmacs_per_point)))
-
-    def total_time(self, i: int, c_idx: int, size_table: np.ndarray,
-                   bandwidth: float) -> float:
-        """Z for a concrete decoupling decision (layer i, bits index c)."""
-        return (
-            self.edge_times()[i]
-            + float(size_table[i, c_idx]) / bandwidth
-            + self.cloud_times()[i]
-        )
+        return self.edge.exec_time(self.total_fmacs)

@@ -10,8 +10,18 @@ from repro.serving.pipeline import (
     PipelineRequest,
     StageTimeline,
 )
+from repro.serving.fleet import (
+    FleetDevice,
+    FleetRequest,
+    FleetServer,
+    build_fleet_server,
+)
 
 __all__ = [
+    "FleetDevice",
+    "FleetRequest",
+    "FleetServer",
+    "build_fleet_server",
     "ServeSession",
     "Request",
     "RequestScheduler",

@@ -19,8 +19,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
-import numpy as np
-
 from repro.config.types import JaladConfig
 from repro.core.adaptation import AdaptationController
 from repro.core.decoupler import DecoupledPlan, DecoupledRunner, JaladEngine
@@ -54,11 +52,22 @@ class RunnerCache:
         default_factory=dict
     )
     _lock: Any = None
+    _full_forward: Any = field(default=None, repr=False, compare=False)
 
     def __post_init__(self):
         import threading
 
         self._lock = threading.Lock()
+
+    def full_forward(self):
+        """The jitted whole-model forward every server falls back to on a
+        cloud-only plan — jitted once and shared, like the split runners.
+        (A benign race can double-jit; last writer wins, same as get().)"""
+        if self._full_forward is None:
+            import jax
+
+            self._full_forward = jax.jit(self.engine.model.forward)
+        return self._full_forward
 
     def get(self, plan: DecoupledPlan) -> DecoupledRunner:
         key = (plan.point, plan.bits, plan.codec)
@@ -101,23 +110,18 @@ class EdgeCloudServer:
         """Run one batch at the given true bandwidth; returns (logits,
         latency breakdown). Advances the simulated clock."""
         plan = self.controller.current_plan(bandwidth)
-        lat = self.engine.latency
+        space = self.engine.plan_space
+        edge_t, cloud_t = space.stage_times(plan)
         if plan.is_cloud_only:
-            t = lat.cloud_only_time(bandwidth, image_ratio=PNG_RATIO)
-            # numerics: full model on the "cloud"
-            import jax
-
-            logits = jax.jit(self.engine.model.forward)(self.params, batch)
-            bd = LatencyBreakdown(0.0, t - lat.cloud.exec_time(
-                float(np.sum(lat.fmacs_per_point))
-            ), lat.cloud.exec_time(float(np.sum(lat.fmacs_per_point))),
-                int(lat.input_bytes * PNG_RATIO), -1, 0)
+            # numerics: full model on the "cloud" (jitted once, cached)
+            logits = self.runners.full_forward()(self.params, batch)
+            nbytes = int(space.input_bytes * PNG_RATIO)
+            bd = LatencyBreakdown(edge_t, nbytes / bandwidth, cloud_t,
+                                  nbytes, -1, 0)
         else:
             runner = self._runner(plan)
             blob, extras = runner.edge_step(batch)
             logits = runner.cloud_step(blob, extras)
-            edge_t = float(lat.edge_times()[plan.point])
-            cloud_t = float(lat.cloud_times()[plan.point])
             transfer_t = blob.nbytes / bandwidth
             bd = LatencyBreakdown(edge_t, transfer_t, cloud_t, blob.nbytes,
                                   plan.point, plan.bits, plan.codec)
@@ -140,9 +144,7 @@ class EdgeCloudServer:
         if plan.is_cloud_only:
             return [self.serve_batch(b, bandwidth) for b in batches]
         runner = self._runner(plan)
-        lat = self.engine.latency
-        edge_t = float(lat.edge_times()[plan.point])
-        cloud_t = float(lat.cloud_times()[plan.point])
+        edge_t, cloud_t = self.engine.plan_space.stage_times(plan)
         out = []
         for blob, extras in runner.edge_step_batch(batches):
             logits = runner.cloud_step(blob, extras)

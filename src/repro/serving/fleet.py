@@ -1,0 +1,285 @@
+"""Fleet-scale edge-cloud serving: N heterogeneous edges, one shared cloud.
+
+The paper's end state (Sec. III-E, Fig. 8) is a cloud that serves *many*
+edge devices, each adapting its decoupling to its own link and its own
+compute. :class:`FleetServer` models exactly that:
+
+* **Per-device decision plane.** Every device gets its own
+  :class:`DeviceProfile`, its own bandwidth (per request, so traces are
+  per-device), and its own :class:`AdaptationController` — but all devices
+  share ONE :class:`~repro.core.planner.PlanSpace` precomputation: the
+  size/accuracy tables and the cloud-time vector are device-independent,
+  so each device's engine is a ``PlanSpace.with_edge`` view that only
+  recomputes the edge-time vector (``JaladEngine.for_edge``).
+
+* **Shared cloud worker with tail batching.** In-flight requests from
+  *different* devices that agreed on the same (point, bits, codec) plan
+  are grouped, and each group executes ONE batched wire decode
+  (:meth:`DecoupledRunner.cloud_step_batch`, mirroring PR 3's
+  ``edge_step_batch``). By default the tails then run through the same
+  per-request callable as the synchronous server, keeping per-request
+  logits **byte-identical** to serving each device through the
+  synchronous :class:`EdgeCloudServer`; ``fuse_cloud_tail=True`` opts
+  into ONE concatenated tail forward per group — the fastest path, but
+  float-level equivalent only (XLA re-blocks reductions per batch size,
+  so bitwise equality across batch shapes is impossible).
+
+* **Reproducible accounting.** The simulated clock extends to a shared
+  cloud queue: per-device FIFO edge and link stages feed a single cloud
+  stage that serves requests in arrival order (ties broken by
+  (device, uid)), each occupying the cloud for its own modeled T_C. The
+  real batched execution never changes the reported numbers, so fleet
+  latency/throughput results are exactly reproducible on any host.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.config.types import DeviceProfile, JaladConfig
+from repro.core.adaptation import AdaptationController
+from repro.core.decoupler import DecoupledPlan, JaladEngine
+from repro.core.latency import PNG_RATIO
+from repro.serving.edge_cloud import LatencyBreakdown, RunnerCache
+from repro.serving.pipeline import StageTimeline
+
+PlanKey = Tuple[int, int, str]            # (point, bits, codec)
+
+
+@dataclass
+class FleetDevice:
+    """One edge device of the fleet: its own profile, engine view (shared
+    PlanSpace, device-specific edge vector) and adaptation controller."""
+
+    device_id: int
+    profile: DeviceProfile
+    engine: JaladEngine
+    controller: AdaptationController
+    clock: float = 0.0                    # sum of service times (sync-equal)
+    log: List[LatencyBreakdown] = field(default_factory=list)
+    _edge_free: float = 0.0               # simulated busy_until
+    _link_free: float = 0.0
+
+
+@dataclass
+class FleetRequest:
+    uid: int
+    device_id: int
+    batch: Any
+    bandwidth: float                      # true link bandwidth (per request)
+    arrival_s: float = 0.0
+    # Filled by the fleet:
+    logits: Any = None
+    plan: Optional[DecoupledPlan] = None
+    breakdown: Optional[LatencyBreakdown] = None
+    timeline: StageTimeline = field(default_factory=StageTimeline)
+    _blob: Any = None
+    _extras: Any = None
+
+
+@dataclass
+class CloudGroup:
+    """One real batched cloud launch: which requests shared it."""
+
+    key: Optional[PlanKey]                # None => cloud-only full forwards
+    uids: List[int]
+
+
+@dataclass
+class FleetServer:
+    """Serve N heterogeneous edge devices against one shared cloud.
+
+    ``engine`` is the template (tables + cloud profile + config); each
+    entry of ``edge_profiles`` becomes a device whose engine shares the
+    template's PlanSpace via ``with_edge``. Runners are shared across
+    devices — a (point, bits, codec) plan compiles once for the fleet.
+    """
+
+    engine: JaladEngine
+    params: Any
+    edge_profiles: Sequence[DeviceProfile]
+    cloud_batch: int = 8                  # max requests per batched launch
+    # False (default): bit-exact tails — one batched decode launch per
+    # group, tails through the same per-request callable as the
+    # synchronous server (byte-identical results). True: additionally
+    # fuse each group into ONE concatenated tail forward (fastest;
+    # float-level equivalent only — see cloud_step_batch).
+    fuse_cloud_tail: bool = False
+    runners: Optional[RunnerCache] = None
+    devices: List[FleetDevice] = field(default_factory=list)
+    completed: List[FleetRequest] = field(default_factory=list)
+    cloud_groups: List[CloudGroup] = field(default_factory=list)
+    _cloud_free: float = 0.0
+
+    def __post_init__(self):
+        if not self.edge_profiles:
+            raise ValueError("FleetServer needs at least one edge profile")
+        if self.runners is None:
+            self.runners = RunnerCache(self.engine, self.params)
+        if not self.devices:
+            for d, prof in enumerate(self.edge_profiles):
+                eng = self.engine.for_edge(prof)
+                self.devices.append(FleetDevice(
+                    device_id=d, profile=prof, engine=eng,
+                    controller=AdaptationController(eng),
+                ))
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    # -------------------------------------------------------------- stages
+    def _edge_and_link_phase(self, reqs: List[FleetRequest]) -> None:
+        """Per-device FIFO edge compute + encode + link transfer. The
+        decision/observation sequence per device is exactly the synchronous
+        ``EdgeCloudServer.serve_batch`` sequence, so per-device plans (and
+        therefore results) match serving each device alone."""
+        for r in reqs:
+            dev = self.devices[r.device_id]
+            plan = dev.controller.current_plan(r.bandwidth)
+            r.plan = plan
+            space = dev.engine.plan_space
+            edge_t, cloud_t = space.stage_times(plan)
+            if plan.is_cloud_only:
+                nbytes = int(space.input_bytes * PNG_RATIO)
+            else:
+                runner = self.runners.get(plan)
+                r._blob, r._extras = runner.edge_step(r.batch)
+                nbytes = r._blob.nbytes
+            transfer_t = nbytes / r.bandwidth
+            tl = r.timeline
+            tl.arrival_s = r.arrival_s
+            tl.edge_start = max(r.arrival_s, dev._edge_free)
+            tl.edge_end = tl.edge_start + edge_t
+            dev._edge_free = tl.edge_end
+            tl.xfer_start = max(tl.edge_end, dev._link_free)
+            tl.xfer_end = tl.xfer_start + transfer_t
+            dev._link_free = tl.xfer_end
+            tl.bytes_sent = nbytes
+            tl.plan_point = plan.point
+            tl.plan_bits = plan.bits
+            tl.plan_codec = plan.codec if not plan.is_cloud_only else ""
+            dev.controller.observe_transfer(max(nbytes, 1),
+                                            max(transfer_t, 1e-9))
+            r.breakdown = LatencyBreakdown(
+                edge_t, transfer_t, cloud_t, nbytes,
+                plan.point if not plan.is_cloud_only else -1,
+                plan.bits if not plan.is_cloud_only else 0,
+                plan.codec if not plan.is_cloud_only else "",
+            )
+
+    def _cloud_phase(self, reqs: List[FleetRequest]) -> List[FleetRequest]:
+        """Shared cloud: FIFO simulated-clock accounting over the merged
+        arrival stream, real execution batched by (point, bits, codec)."""
+        queue = sorted(
+            reqs, key=lambda r: (r.timeline.xfer_end, r.device_id, r.uid))
+        # Accounting: each request occupies the shared cloud stage for its
+        # own modeled T_C, in arrival order — batching never changes the
+        # reported numbers.
+        for r in queue:
+            tl = r.timeline
+            tl.cloud_start = max(tl.xfer_end, self._cloud_free)
+            tl.cloud_end = tl.cloud_start + r.breakdown.cloud_s
+            self._cloud_free = tl.cloud_end
+        # Real numerics: group the in-flight queue by plan key and run one
+        # batched wire decode + one batched tail forward per group.
+        groups: Dict[Optional[PlanKey], List[FleetRequest]] = {}
+        order: List[Optional[PlanKey]] = []
+        for r in queue:
+            key = (None if r.plan.is_cloud_only else
+                   (r.plan.point, r.plan.bits, r.plan.codec))
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(r)
+        for key in order:
+            members = groups[key]
+            if key is None:
+                full = self.runners.full_forward()
+                for r in members:
+                    r.logits = full(self.params, r.batch)
+                self.cloud_groups.append(
+                    CloudGroup(None, [r.uid for r in members]))
+                continue
+            runner = self.runners.get(members[0].plan)
+            step = max(self.cloud_batch, 1)
+            for i in range(0, len(members), step):
+                chunk = members[i:i + step]
+                outs = runner.cloud_step_batch(
+                    [r._blob for r in chunk],
+                    [r._extras for r in chunk],
+                    fuse_tail=self.fuse_cloud_tail,
+                )
+                for r, logits in zip(chunk, outs):
+                    r.logits = logits
+                self.cloud_groups.append(
+                    CloudGroup(key, [r.uid for r in chunk]))
+        return queue
+
+    # -------------------------------------------------------------- public
+    def serve(self, requests: Iterable[FleetRequest]) -> List[FleetRequest]:
+        """Run a fleet request stream to completion. Returns the requests
+        in cloud-completion order (per-device submission order is preserved
+        inside each device's edge/link stages)."""
+        reqs = list(requests)
+        for r in reqs:
+            if not 0 <= r.device_id < self.n_devices:
+                raise ValueError(
+                    f"request {r.uid} names unknown device {r.device_id}")
+        self._edge_and_link_phase(reqs)
+        done = self._cloud_phase(reqs)
+        # Per-device bookkeeping in submission order — mirrors the
+        # synchronous server's clock/log exactly.
+        for r in reqs:
+            dev = self.devices[r.device_id]
+            dev.clock += r.breakdown.total_s
+            dev.log.append(r.breakdown)
+            r._blob = r._extras = None
+        self.completed.extend(done)
+        return done
+
+    # ----------------------------------------------------------- reporting
+    @property
+    def makespan_s(self) -> float:
+        """Simulated wall-clock from first arrival to last cloud finish."""
+        if not self.completed:
+            return 0.0
+        start = min(r.timeline.arrival_s for r in self.completed)
+        return max(r.timeline.cloud_end for r in self.completed) - start
+
+    def synchronous_time_s(self) -> float:
+        """Total cost without any overlap or sharing: the sum of every
+        request's sequential service time across the fleet."""
+        return sum(r.breakdown.total_s for r in self.completed)
+
+    def batched_launches(self) -> int:
+        """Real batched cloud launches that covered more than one request."""
+        return sum(1 for g in self.cloud_groups
+                   if g.key is not None and len(g.uids) > 1)
+
+
+def build_fleet_server(
+    cfg,
+    jalad_cfg: JaladConfig,
+    edge_profiles: Sequence[DeviceProfile],
+    *,
+    seed: int = 0,
+    calib_batches: int = 2,
+    calib_batch_size: int = 8,
+    seq_len: int = 64,
+    params: Any = None,
+    points: Optional[List[int]] = None,
+    cloud_batch: int = 8,
+) -> Tuple[FleetServer, Any]:
+    """End-to-end factory: one calibration (tables are device-independent),
+    one PlanSpace, N per-device engine views."""
+    from repro.serving.edge_cloud import build_edge_cloud_server
+
+    srv, params = build_edge_cloud_server(
+        cfg, jalad_cfg, seed=seed, calib_batches=calib_batches,
+        calib_batch_size=calib_batch_size, seq_len=seq_len, params=params,
+        points=points,
+    )
+    fleet = FleetServer(srv.engine, params, list(edge_profiles),
+                        cloud_batch=cloud_batch)
+    return fleet, params

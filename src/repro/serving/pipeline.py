@@ -48,8 +48,6 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Iterable, List, Optional, Tuple
 
-import numpy as np
-
 from repro.core.adaptation import AdaptationController, AdaptationEvent
 from repro.core.decoupler import DecoupledPlan, JaladEngine
 from repro.core.latency import PNG_RATIO
@@ -131,7 +129,6 @@ class PipelinedEdgeCloudServer:
         self._edge_free = 0.0          # simulated busy_until per stage
         self._link_free = 0.0
         self._cloud_free = 0.0
-        self._full_forward = None      # jitted whole model (cloud-only plan)
         self._stage_error: Optional[BaseException] = None
         self._window: List[PipelineRequest] = []   # latest serve() stream
         # Re-decoupling hook: register the incoming plan's runner in the
@@ -173,7 +170,7 @@ class PipelinedEdgeCloudServer:
         return group, False
 
     def _edge_worker(self) -> None:
-        lat = self.engine.latency
+        space = self.engine.plan_space
         shutdown = False
         while not shutdown:
             req = self._edge_q.get()
@@ -212,8 +209,7 @@ class PipelinedEdgeCloudServer:
             # still occupies the modeled edge stage for its own duration.
             for r in group:
                 tl = r.timeline
-                edge_t = 0.0 if r.plan.is_cloud_only else \
-                    float(lat.edge_times()[r.plan.point])
+                edge_t, _ = space.stage_times(r.plan)
                 tl.edge_start = max(r.arrival_s, self._edge_free)
                 tl.edge_end = tl.edge_start + edge_t
                 self._edge_free = tl.edge_end
@@ -221,7 +217,7 @@ class PipelinedEdgeCloudServer:
         self._link_q.put(_SHUTDOWN)
 
     def _link_worker(self) -> None:
-        lat = self.engine.latency
+        space = self.engine.plan_space
         while True:
             req = self._link_q.get()
             if req is _SHUTDOWN:
@@ -229,7 +225,7 @@ class PipelinedEdgeCloudServer:
                 return
             tl = req.timeline
             if req.plan.is_cloud_only:
-                nbytes = int(lat.input_bytes * PNG_RATIO)
+                nbytes = int(space.input_bytes * PNG_RATIO)
             else:
                 nbytes = req._blob.nbytes
             transfer_t = nbytes / req.bandwidth
@@ -243,26 +239,20 @@ class PipelinedEdgeCloudServer:
             self._cloud_q.put(req)
 
     def _cloud_worker(self) -> None:
-        lat = self.engine.latency
+        space = self.engine.plan_space
         while True:
             req = self._cloud_q.get()
             if req is _SHUTDOWN:
                 return
             plan = req.plan
             tl = req.timeline
+            _, cloud_t = space.stage_times(plan)
             if plan.is_cloud_only:
-                if self._full_forward is None:
-                    import jax
-
-                    self._full_forward = jax.jit(self.engine.model.forward)
-                req.logits = self._full_forward(self.params, req.batch)
-                cloud_t = lat.cloud.exec_time(
-                    float(np.sum(lat.fmacs_per_point))
-                )
+                req.logits = self.runners.full_forward()(self.params,
+                                                         req.batch)
             else:
                 runner = self.runners.get(plan)
                 req.logits = runner.cloud_step(req._blob, req._extras)
-                cloud_t = float(lat.cloud_times()[plan.point])
             tl.cloud_start = max(tl.xfer_end, self._cloud_free)
             tl.cloud_end = tl.cloud_start + cloud_t
             self._cloud_free = tl.cloud_end

@@ -67,6 +67,39 @@ def test_bandwidth_estimator_ewma():
     assert abs(est.estimate - 1e6) / 1e6 < 0.2
 
 
+def test_bandwidth_estimator_ignores_degenerate_samples():
+    """Zero/negative durations (clock skew) and empty transfers carry no
+    rate information; they must not poison the EWMA with inf/garbage."""
+    est = BandwidthEstimator()
+    assert est.observe(1e6, 0.0) is None
+    assert est.observe(1e6, -1.0) is None
+    assert est.observe(0.0, 1.0) is None
+    assert est.estimate is None               # still uninitialised
+    est.observe(1e6, 1.0)
+    before = est.estimate
+    assert est.observe(5e9, 0.0) == before    # ignored, estimate unchanged
+    assert est.observe(-5.0, 1.0) == before
+    assert est.estimate == before
+    assert np.isfinite(est.estimate)
+
+
+def test_bandwidth_estimator_jitter_robustness():
+    """Step + noisy traces converge to the true bandwidth within tolerance
+    even with occasional zero-duration glitches interleaved."""
+    rng = np.random.default_rng(0)
+    est = BandwidthEstimator(alpha=0.3)
+    for _ in range(60):                       # noisy plateau at 2 MB/s
+        secs = max(rng.normal(1.0, 0.2), 1e-3)
+        est.observe(2e6 * secs * (1 + rng.normal(0, 0.05)), secs)
+    assert abs(est.estimate - 2e6) / 2e6 < 0.15
+    for i in range(80):                       # jittery step down to 250 KB/s
+        if i % 10 == 3:
+            est.observe(1e6, 0.0)             # glitch: must be ignored
+        secs = max(rng.normal(1.0, 0.3), 1e-3)
+        est.observe(250e3 * secs * (1 + rng.normal(0, 0.1)), secs)
+    assert abs(est.estimate - 250e3) / 250e3 < 0.2
+
+
 def test_controller_replans_on_bandwidth_shift(server):
     ctl = AdaptationController(server.engine)
     p1 = ctl.current_plan(10e6)

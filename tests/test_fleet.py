@@ -1,0 +1,208 @@
+"""Fleet-scale serving: N heterogeneous devices against one shared cloud
+must be byte-identical, request for request, to serving each device through
+its own synchronous EdgeCloudServer — while the shared cloud actually
+batches same-plan tails and the simulated clock stays FIFO-consistent."""
+import numpy as np
+import pytest
+
+from repro.config import JaladConfig, get_config
+from repro.config.types import EDGE_TK1, EDGE_TX2, DeviceProfile
+from repro.data.synthetic import make_batch
+from repro.serving.edge_cloud import EdgeCloudServer, build_edge_cloud_server
+from repro.serving.fleet import FleetRequest, FleetServer
+
+PROFILES = [
+    EDGE_TX2,                                     # paper's TX2
+    EDGE_TK1,                                     # paper's (much slower) TK1
+    DeviceProfile("edge-mid", 1e12, 1.30),        # in-between device
+    DeviceProfile("edge-fast", 4e12, 0.90),       # beefier-than-TX2 device
+]
+BWS = [1e6, 300e3, 2e6, 600e3]                    # per-device link bandwidth
+REQS_PER_DEVICE = 3
+
+
+@pytest.fixture(scope="module")
+def fleet_setup():
+    cfg = get_config("resnet50").reduced()
+    jc = JaladConfig(bits_choices=(2, 4, 8), accuracy_drop_budget=0.10,
+                     bandwidth_bytes_per_s=1e6)
+    srv, params = build_edge_cloud_server(cfg, jc, calib_batches=2,
+                                          calib_batch_size=8)
+    return srv.engine, params, cfg
+
+
+def _batches(cfg):
+    return {d: [make_batch(cfg, 4, 0, seed=100 + 10 * d + j)
+                for j in range(REQS_PER_DEVICE)]
+            for d in range(len(PROFILES))}
+
+
+def _requests(batches):
+    """Interleave devices round-robin (the per-device subsequence is what
+    the equivalence contract is about)."""
+    reqs, uid = [], 0
+    for j in range(REQS_PER_DEVICE):
+        for d in range(len(PROFILES)):
+            reqs.append(FleetRequest(uid=uid, device_id=d,
+                                     batch=dict(batches[d][j]),
+                                     bandwidth=BWS[d]))
+            uid += 1
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def served_fleet(fleet_setup):
+    engine, params, cfg = fleet_setup
+    fleet = FleetServer(engine, params, PROFILES)
+    batches = _batches(cfg)
+    done = fleet.serve(_requests(batches))
+    return fleet, done, batches
+
+
+def test_fleet_matches_per_device_synchronous_serving(fleet_setup,
+                                                      served_fleet):
+    """Acceptance: >= 4 heterogeneous devices, byte-identical per-request
+    logits AND identical latency breakdowns vs the synchronous server."""
+    engine, params, cfg = fleet_setup
+    fleet, done, batches = served_fleet
+    assert len(done) == len(PROFILES) * REQS_PER_DEVICE
+    by_uid = {r.uid: r for r in done}
+    for d in range(len(PROFILES)):
+        ref = EdgeCloudServer(fleet.devices[d].engine, params)
+        for j in range(REQS_PER_DEVICE):
+            logits, bd = ref.serve_batch(dict(batches[d][j]),
+                                         bandwidth=BWS[d])
+            r = by_uid[j * len(PROFILES) + d]
+            assert r.breakdown == bd
+            np.testing.assert_array_equal(
+                np.asarray(r.logits), np.asarray(logits))
+        # per-device simulated clock == synchronous server clock
+        assert fleet.devices[d].clock == pytest.approx(ref.clock)
+        assert fleet.devices[d].log == ref.log
+
+
+def test_devices_share_one_plan_space(fleet_setup, served_fleet):
+    """Heterogeneous engines are views of ONE PlanSpace: the
+    bandwidth-independent tables are shared by identity, only the
+    edge-time vectors differ."""
+    engine, params, _ = fleet_setup
+    fleet, _, _ = served_fleet
+    shared = engine.plan_space
+    for dev in fleet.devices:
+        assert dev.engine.plan_space.size_flat is shared.size_flat
+        assert dev.engine.plan_space.acc_flat is shared.acc_flat
+        assert dev.engine.plan_space.cloud_vec is shared.cloud_vec
+    # TK1 (300 GFLOPs) is strictly slower than TX2 (2 TFLOPs) per point
+    tx2 = fleet.devices[0].engine.plan_space.edge_vec
+    tk1 = fleet.devices[1].engine.plan_space.edge_vec
+    assert (tk1 > tx2).all()
+
+
+def test_shared_cloud_actually_batches(served_fleet):
+    """With a steady per-device bandwidth every device keeps one plan, so
+    its in-flight requests group: at least one real cloud launch must have
+    covered multiple requests."""
+    fleet, done, _ = served_fleet
+    assert fleet.batched_launches() >= 1
+    covered = [u for g in fleet.cloud_groups for u in g.uids]
+    assert sorted(covered) == sorted(r.uid for r in done)
+
+
+def test_shared_cloud_queue_is_fifo_and_causal(served_fleet):
+    """Simulated-clock invariants of the shared cloud stage: requests are
+    served in arrival order, occupancy never overlaps, and no request
+    enters the cloud before its transfer finished."""
+    fleet, done, _ = served_fleet
+    eps = 1e-12
+    for r in done:
+        tl = r.timeline
+        assert tl.cloud_start >= tl.xfer_end - eps
+        assert tl.xfer_start >= tl.edge_end - eps
+        assert tl.cloud_end == pytest.approx(
+            tl.cloud_start + r.breakdown.cloud_s)
+    for a, b in zip(done, done[1:]):          # completion order == FIFO
+        assert b.timeline.cloud_start >= a.timeline.cloud_end - eps
+        assert b.timeline.xfer_end >= a.timeline.xfer_end - eps
+
+
+def test_per_device_links_never_overlap(served_fleet):
+    fleet, done, _ = served_fleet
+    eps = 1e-12
+    for d in range(fleet.n_devices):
+        mine = [r for r in done if r.device_id == d]
+        mine.sort(key=lambda r: r.timeline.edge_start)
+        for a, b in zip(mine, mine[1:]):
+            assert b.timeline.edge_start >= a.timeline.edge_end - eps
+            assert b.timeline.xfer_start >= a.timeline.xfer_end - eps
+
+
+def test_cloud_step_batch_is_byte_identical_to_cloud_step(fleet_setup):
+    """The DecoupledRunner contract the shared cloud leans on: one batched
+    decode feeding the per-request tail callable == the per-request path,
+    byte for byte — including blobs with different leading batch sizes."""
+    engine, params, cfg = fleet_setup
+    plan = engine.decide(1e6)
+    assert not plan.is_cloud_only
+    runner = engine.make_runner(params, plan)
+    blobs = []
+    for i, bsz in enumerate((4, 2, 4)):
+        blob, _ = runner.edge_step(make_batch(cfg, bsz, 0, seed=200 + i))
+        blobs.append(blob)
+    batched = runner.cloud_step_batch(blobs)
+    for blob, out in zip(blobs, batched):
+        ref = runner.cloud_step(blob)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_fused_cloud_tail_is_float_equivalent(fleet_setup):
+    """fuse_tail=True runs ONE concatenated tail forward per group: not
+    bitwise (XLA re-blocks reductions per batch size) but tightly
+    float-equivalent to the per-request path."""
+    engine, params, cfg = fleet_setup
+    plan = engine.decide(1e6)
+    runner = engine.make_runner(params, plan)
+    blobs = [runner.edge_step(make_batch(cfg, 4, 0, seed=230 + i))[0]
+             for i in range(3)]
+    fused = runner.cloud_step_batch(blobs, fuse_tail=True)
+    for blob, out in zip(blobs, fused):
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(runner.cloud_step(blob), np.float32),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_fused_fleet_matches_exact_fleet_within_float(fleet_setup):
+    """A fuse_cloud_tail fleet reports the exact same plans/accounting and
+    float-equivalent logits as the bit-exact default fleet."""
+    engine, params, cfg = fleet_setup
+    batches = _batches(cfg)
+    exact = FleetServer(engine, params, PROFILES)
+    fused = FleetServer(engine, params, PROFILES, fuse_cloud_tail=True)
+    done_exact = {r.uid: r for r in exact.serve(_requests(batches))}
+    done_fused = {r.uid: r for r in fused.serve(_requests(batches))}
+    assert fused.batched_launches() >= 1
+    for uid, r in done_exact.items():
+        f = done_fused[uid]
+        assert f.breakdown == r.breakdown
+        assert f.timeline.cloud_end == pytest.approx(r.timeline.cloud_end)
+        np.testing.assert_allclose(
+            np.asarray(f.logits, np.float32),
+            np.asarray(r.logits, np.float32), rtol=1e-5, atol=1e-5)
+
+
+def test_fleet_rejects_bad_inputs(fleet_setup):
+    engine, params, _ = fleet_setup
+    with pytest.raises(ValueError):
+        FleetServer(engine, params, [])
+    solo = FleetServer(engine, params, PROFILES[:1])
+    with pytest.raises(ValueError):
+        solo.serve([FleetRequest(uid=0, device_id=3, batch=None,
+                                 bandwidth=1e6)])
+
+
+def test_fleet_makespan_reflects_sharing(served_fleet):
+    """The shared-cloud fleet overlaps per-device stages: the makespan must
+    beat the fully sequential sum of service times."""
+    fleet, done, _ = served_fleet
+    assert fleet.makespan_s > 0
+    assert fleet.makespan_s < fleet.synchronous_time_s()

@@ -1,0 +1,249 @@
+"""The vectorized planner (PlanSpace): its fused-argmin decide must agree
+with both ILP oracle solvers on randomized (N, C, K) instances, fall back
+to cloud-only exactly like the engine, and share its bandwidth-independent
+precomputation across heterogeneous edge devices (``with_edge``)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.types import (
+    CLOUD_1080TI,
+    EDGE_TK1,
+    EDGE_TX2,
+    DeviceProfile,
+    JaladConfig,
+)
+from repro.core.adaptation import AdaptationController
+from repro.core.decoupler import JaladEngine
+from repro.core.ilp import solve_branch_and_bound, solve_enumeration
+from repro.core.latency import LatencyModel
+from repro.core.planner import PlanSpace
+from repro.core.predictor import PredictorTables
+
+
+def random_space(seed, n=None, c=None, k=None, budget=None,
+                 point_indices=None, edge=EDGE_TX2):
+    rng = np.random.default_rng(seed)
+    n = n or int(rng.integers(1, 12))
+    c = c or int(rng.integers(1, 5))
+    k = k or int(rng.integers(1, 4))
+    # The latency model spans ALL model points; the tables span the
+    # (possibly subsampled) rows named by point_indices.
+    n_model = n if point_indices is None else max(point_indices) + 1
+    fmacs = rng.random(n_model) * 1e9 + 1e8
+    lat = LatencyModel(fmacs, edge, CLOUD_1080TI, input_bytes=150_528.0)
+    tables = PredictorTables(
+        points=[f"p{i}" for i in range(n)],
+        bits_choices=[2 + i for i in range(c)],
+        codecs=[f"codec{i}" for i in range(k)],
+        acc_drop=rng.random((n, c, k)) * 0.3,
+        size_bytes=rng.random((n, c, k)) * 1e6 + 1e3,
+        base_accuracy=0.9,
+    )
+    budget = budget if budget is not None else float(rng.random() * 0.3)
+    space = PlanSpace.build(tables, lat, budget, point_indices)
+    return space, tables, lat, budget
+
+
+def random_bw(seed):
+    return float(10 ** np.random.default_rng(seed ^ 0xBEEF).uniform(4, 8))
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=100, deadline=None)
+def test_planner_matches_both_oracles(seed):
+    """decide == solve_enumeration == solve_branch_and_bound: same argmin
+    cell cost, same objective, on the identical cost tables."""
+    space, _, _, budget = random_space(seed)
+    bw = random_bw(seed)
+    plan = space.decide(bw)
+    problem = space.ilp_problem(bw)
+    enum = solve_enumeration(problem)
+    bnb = solve_branch_and_bound(problem)
+    if enum is None:
+        assert bnb is None
+        assert plan.is_cloud_only
+        assert plan.predicted_latency == space.cloud_only_time(bw)
+    else:
+        assert bnb is not None
+        assert np.isclose(enum.objective, bnb.objective, rtol=0, atol=0)
+        # bitwise: the planner's fused argmin reads the same float values
+        assert plan.predicted_latency == enum.objective
+        assert plan.predicted_acc_drop <= budget + 1e-12
+        # same argmin modulo exact cost ties
+        enum_plan = space.plan_from_solution(enum)
+        assert plan.predicted_latency == enum_plan.predicted_latency
+        assert space.plan_cost(plan, bw) == space.plan_cost(enum_plan, bw)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=50, deadline=None)
+def test_plan_cost_matches_decide(seed):
+    """plan_cost (the single Z implementation) reproduces the objective of
+    the plan decide() just picked."""
+    space, _, _, _ = random_space(seed)
+    bw = random_bw(seed)
+    plan = space.decide(bw)
+    assert np.isclose(space.plan_cost(plan, bw), plan.predicted_latency,
+                      rtol=1e-12)
+
+
+def test_infeasible_budget_falls_back_to_cloud_only():
+    space, _, lat, _ = random_space(7, n=5, c=3, k=2, budget=-1.0)
+    plan = space.decide(1e6)
+    assert plan.is_cloud_only
+    assert plan.predicted_latency == space.cloud_only_time(1e6)
+    assert space.cloud_only_time(1e6) == lat.cloud_only_time(1e6)
+    # plan_cost of a cloud-only plan is the cloud-only baseline
+    assert space.plan_cost(plan, 2e6) == space.cloud_only_time(2e6)
+
+
+def test_point_indices_map_rows_to_model_points():
+    rows = [3, 5, 9, 11]
+    space, _, _, _ = random_space(11, n=4, c=2, k=2, budget=1.0,
+                                  point_indices=rows)
+    plan = space.decide(1e6)
+    assert plan.point in rows
+    assert space.row_of_point(plan.point) == rows.index(plan.point)
+
+
+def test_with_edge_shares_tables_and_rescales_edge_vector():
+    space, _, _, _ = random_space(3, n=6, c=3, k=2, budget=1.0)
+    half = DeviceProfile("half-speed", EDGE_TX2.flops / 2, EDGE_TX2.w)
+    view = space.with_edge(half)
+    # device-independent arrays are shared, not copied
+    assert view.size_flat is space.size_flat
+    assert view.acc_flat is space.acc_flat
+    assert view.cloud_vec is space.cloud_vec
+    assert view.cum_fmacs is space.cum_fmacs
+    np.testing.assert_allclose(view.edge_vec, 2.0 * space.edge_vec)
+    # and the view is what building from scratch with that edge would give
+    np.testing.assert_array_equal(
+        view.edge_vec,
+        np.array([half.exec_time(q) for q in space.cum_fmacs]),
+    )
+
+
+def test_with_edge_decides_like_a_fresh_build():
+    _, tables, lat, budget = random_space(19, n=8, c=3, k=2, budget=0.2)
+    shared = PlanSpace.build(tables, lat, budget)
+    view = shared.with_edge(EDGE_TK1)
+    fresh_lat = LatencyModel(lat.fmacs_per_point, EDGE_TK1, lat.cloud,
+                             lat.input_bytes)
+    fresh = PlanSpace.build(tables, fresh_lat, budget)
+    for bw in (50e3, 1e6, 20e6):
+        a, b = view.decide(bw), fresh.decide(bw)
+        assert (a.point, a.bits, a.codec) == (b.point, b.bits, b.codec)
+        assert a.predicted_latency == b.predicted_latency
+
+
+def test_precomputed_arrays_are_readonly():
+    space, _, _, _ = random_space(23)
+    for arr in (space.edge_vec, space.cloud_vec, space.size_flat,
+                space.acc_flat, space.base, space.base_raw,
+                space.cum_fmacs):
+        with pytest.raises(ValueError):
+            arr[(0,) * arr.ndim] = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Engine-level routing: decide(method=...) cross-checks
+# ---------------------------------------------------------------------------
+
+
+def _engine(seed=31, budget=0.2):
+    space, tables, lat, _ = random_space(seed, n=10, c=3, k=3, budget=budget)
+    cfg = JaladConfig(bits_choices=tuple(tables.bits_choices),
+                      codec_choices=tuple(tables.codecs),
+                      accuracy_drop_budget=budget)
+    # model is never touched by the decision plane
+    return JaladEngine(None, tables, lat, cfg)
+
+
+def test_engine_decide_methods_agree():
+    eng = _engine()
+    for bw in (30e3, 500e3, 1e6, 50e6):
+        fast = eng.decide(bw)                       # planner fast path
+        enum = eng.decide(bw, method="enumeration")  # oracle 1
+        bnb = eng.decide(bw, method="bnb")           # oracle 2
+        for other in (enum, bnb):
+            assert fast.predicted_latency == other.predicted_latency
+            assert eng.plan_space.plan_cost(fast, bw) == \
+                eng.plan_space.plan_cost(other, bw)
+
+
+def test_engine_plan_space_is_cached():
+    eng = _engine()
+    assert eng.plan_space is eng.plan_space
+    eng.decide(1e6)
+    eng.decide(2e6)
+    assert eng._plan_space is not None
+
+
+def test_engine_for_edge_shares_plan_space_precomputation():
+    eng = _engine()
+    dev = eng.for_edge(EDGE_TK1)
+    assert dev.plan_space.size_flat is eng.plan_space.size_flat
+    assert dev.latency.edge is EDGE_TK1
+    assert dev.tables is eng.tables
+    # slower edge -> strictly larger edge-time vector
+    assert (dev.plan_space.edge_vec > eng.plan_space.edge_vec).all()
+
+
+def test_controller_hysteresis_routes_through_plan_space():
+    """The controller's old-plan cost check is PlanSpace.plan_cost — there
+    is no second Z implementation to drift out of sync."""
+    eng = _engine(seed=41, budget=0.25)
+    ctl = AdaptationController(eng, switch_margin=0.05)
+    p1 = ctl.current_plan(20e6)
+    assert p1 is ctl.plan
+    # Predict the controller's hysteresis decision from the single Z
+    # implementation, then check it did exactly that.
+    collapsed = 20e3
+    old_cost = eng.plan_space.plan_cost(p1, collapsed)
+    candidate = eng.decide(collapsed)
+    same_choice = (candidate.point, candidate.bits, candidate.codec) == \
+        (p1.point, p1.bits, p1.codec)
+    expect_switch = (not same_choice and
+                     candidate.predicted_latency < old_cost * 0.95)
+    p2 = ctl.current_plan(collapsed)
+    assert len(ctl.history) == (2 if expect_switch else 1)
+    if expect_switch:
+        assert (p2.point, p2.bits, p2.codec) == \
+            (candidate.point, candidate.bits, candidate.codec)
+    else:
+        assert p2 is p1
+
+
+def test_no_plan_cost_duplicate_left():
+    """Regression for the refactor goal: the decision plane has exactly one
+    Z(i,c,k,BW) implementation (PlanSpace.plan_cost)."""
+    import repro.core.adaptation as adaptation
+    import repro.core.latency as latency
+
+    assert not hasattr(AdaptationController, "_plan_cost")
+    assert "def _plan_cost" not in open(adaptation.__file__).read()
+    assert not hasattr(LatencyModel, "total_time")
+    assert "def total_time" not in open(latency.__file__).read()
+
+
+# ---------------------------------------------------------------------------
+# dataclass-field regression (satellite): AdaptationController.bw
+# ---------------------------------------------------------------------------
+
+
+def test_controller_bw_is_a_real_dataclass_field():
+    """``bw = None`` without an annotation used to be a class attribute —
+    absent from __init__/repr/eq and shared across instances."""
+    names = {f.name for f in dataclasses.fields(AdaptationController)}
+    assert "bw" in names
+    a = AdaptationController(engine=object())
+    b = AdaptationController(engine=object())
+    assert a.bw is None and b.bw is None
+    a.bw = 123.0
+    assert b.bw is None                   # no shared class-level state
+    assert AdaptationController.__dataclass_fields__["bw"].default is None
+    c = AdaptationController(engine=object(), bw=5e5)   # now in __init__
+    assert c.bw == 5e5
