@@ -1,0 +1,173 @@
+"""Calibration pipeline benchmark: the vectorized one-pass ``build_tables``
+vs the historical per-cell loop (``build_tables_reference``), plus the
+config-hashed table cache that lets server startup skip recalibration.
+
+Claims checked by assertion (so ``benchmarks.run`` fails loudly if they
+regress):
+
+1. **>= 3x end-to-end table-build speedup** at paper scale on the CNN
+   testbed — N >= 16 decoupling points, C >= 4 bit widths, K >= 2 codecs
+   — with warm jit caches (the steady-state recalibration cost an
+   adaptive deployment actually pays).
+2. **Bitwise-equal tables**: acc_drop, size_bytes and base_accuracy of
+   the two paths are identical to the last bit.
+3. **Device/host traffic**: the vectorized path issues ONE jitted step
+   dispatch and ONE host sync per calibration batch; the reference pays
+   one tail launch + sync per (point, bits, value-transform) cell.
+4. **Cache-hit startup**: ``build_edge_cloud_server`` with a
+   ``tables_cache_dir`` loads the persisted tables on a repeat config
+   and starts faster than the cold calibrating build.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result
+from repro.config import JaladConfig, get_config
+from repro.core import predictor as pred
+from repro.core.predictor import build_tables, build_tables_reference
+from repro.data.synthetic import make_batch
+from repro.models.api import build_model
+from repro.serving.edge_cloud import build_edge_cloud_server
+
+BITS_QUICK = (2, 3, 4, 8)
+BITS_FULL = (2, 3, 4, 6, 8)
+CODECS_QUICK = ("huffman", "bitpack")
+CODECS_FULL = ("huffman", "bitpack", "perchannel")
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return time.perf_counter() - t0, out
+
+
+def run(quick: bool = True) -> Dict:
+    # resnet50 reduced: 32x32, 20 cut points (res-unit granularity) —
+    # the paper's own testbed, and the geometry where per-cell dispatch
+    # overhead (what the vectorized pipeline removes) is representative.
+    cfg = get_config("resnet50").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    bits = BITS_QUICK if quick else BITS_FULL
+    codecs = CODECS_QUICK if quick else CODECS_FULL
+    n_batches, bsz = (1, 4) if quick else (2, 8)
+    batches = [make_batch(cfg, bsz, 0, seed=10 + i)
+               for i in range(n_batches)]
+    n_points = len(model.decoupling_points())
+    # Paper scale, per the acceptance bar of the vectorized pipeline.
+    assert n_points >= 16 and len(bits) >= 4 and len(codecs) >= 2
+
+    def ref():
+        return build_tables_reference(model, params, batches, list(bits),
+                                      codecs=codecs)
+
+    def vec():
+        return build_tables(model, params, batches, list(bits),
+                            codecs=codecs)
+
+    t_ref_cold, tab_ref = _timed(ref)
+    ref_stats = dataclasses.replace(pred.LAST_BUILD_STATS)
+    t_vec_cold, tab_vec = _timed(vec)
+    vec_stats = dataclasses.replace(pred.LAST_BUILD_STATS)
+
+    # Bitwise equality of the full tables.
+    assert tab_ref.points == tab_vec.points
+    np.testing.assert_array_equal(tab_ref.acc_drop, tab_vec.acc_drop)
+    np.testing.assert_array_equal(tab_ref.size_bytes, tab_vec.size_bytes)
+    assert tab_ref.base_accuracy == tab_vec.base_accuracy
+
+    # Warm rebuilds: jit caches populated, the recurring recalibration
+    # cost (the vectorized step fns are cached on the model instance).
+    t_ref_warm, _ = _timed(ref)
+    t_vec_warm, _ = _timed(vec)
+    speedup_warm = t_ref_warm / t_vec_warm
+    speedup_cold = t_ref_cold / t_vec_cold
+
+    rows = [
+        ["reference loop", f"{t_ref_cold:.1f}s", f"{t_ref_warm:.1f}s",
+         ref_stats.step_dispatches, ref_stats.host_syncs,
+         ref_stats.size_calls],
+        ["vectorized one-pass", f"{t_vec_cold:.1f}s", f"{t_vec_warm:.1f}s",
+         vec_stats.step_dispatches, vec_stats.host_syncs,
+         vec_stats.size_calls],
+    ]
+    print(f"\nCalibration table build on {cfg.arch_id} "
+          f"(N={n_points} points, C={len(bits)} bits, K={len(codecs)} "
+          f"codecs, {n_batches}x{bsz} samples)")
+    print(fmt_table(rows, ["path", "cold", "warm (jit cached)",
+                           "dispatches", "host syncs", "size calls"]))
+    print(f"table-build speedup: {speedup_warm:.1f}x warm, "
+          f"{speedup_cold:.1f}x cold; tables bitwise-equal")
+
+    assert speedup_warm >= 3.0, (
+        f"vectorized calibration must be >= 3x the reference loop "
+        f"(warm), got {speedup_warm:.2f}x "
+        f"({t_ref_warm:.1f}s vs {t_vec_warm:.1f}s)"
+    )
+    # Traffic accounting: one dispatch + one sync per batch, vs one tail
+    # sync per (point, bits, value-transform) cell in the loop.
+    assert vec_stats.step_dispatches == n_batches
+    assert vec_stats.host_syncs == n_batches
+    assert ref_stats.host_syncs > n_points * len(bits) * n_batches
+
+    # ----------------------------------------- cache-hit server startup
+    jc = JaladConfig(bits_choices=(2, 4, 8), accuracy_drop_budget=0.10,
+                     codec_choices=("bitpack", "huffman"))
+    srv_points = [2, 6, 10, 14]
+    with tempfile.TemporaryDirectory() as cache_dir:
+        def start():
+            return build_edge_cloud_server(
+                cfg, jc, calib_batches=1, calib_batch_size=2,
+                points=srv_points, tables_cache_dir=cache_dir,
+            )
+
+        t_cold_start, (srv_a, _) = _timed(start)
+        t_hit_start, (srv_b, _) = _timed(start)
+        np.testing.assert_array_equal(srv_a.engine.tables.size_bytes,
+                                      srv_b.engine.tables.size_bytes)
+        np.testing.assert_array_equal(srv_a.engine.tables.acc_drop,
+                                      srv_b.engine.tables.acc_drop)
+    print(f"server startup: {t_cold_start:.1f}s calibrating cold vs "
+          f"{t_hit_start:.1f}s on a table-cache hit "
+          f"({t_cold_start / t_hit_start:.1f}x)")
+    assert t_hit_start < t_cold_start, (
+        "cache-hit startup must beat the cold calibrating build"
+    )
+
+    results = {
+        "arch": cfg.arch_id,
+        "n_points": n_points,
+        "bits": list(bits),
+        "codecs": list(codecs),
+        "calib": {"batches": n_batches, "batch_size": bsz},
+        "reference": {
+            "cold_s": t_ref_cold, "warm_s": t_ref_warm,
+            "dispatches": ref_stats.step_dispatches,
+            "host_syncs": ref_stats.host_syncs,
+            "size_calls": ref_stats.size_calls,
+        },
+        "vectorized": {
+            "cold_s": t_vec_cold, "warm_s": t_vec_warm,
+            "dispatches": vec_stats.step_dispatches,
+            "host_syncs": vec_stats.host_syncs,
+            "size_calls": vec_stats.size_calls,
+        },
+        "speedup_warm_x": speedup_warm,
+        "speedup_cold_x": speedup_cold,
+        "tables_bitwise_equal": True,
+        "startup": {
+            "cold_s": t_cold_start,
+            "cache_hit_s": t_hit_start,
+            "speedup_x": t_cold_start / t_hit_start,
+        },
+    }
+    path = save_result("calibration", results)
+    print(f"wrote {path}")
+    return results

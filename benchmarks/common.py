@@ -80,8 +80,11 @@ def cnn_setup(arch: str, quick: bool = True, seed: int = 0):
     def latency_for(edge_profile):
         return LatencyModel(fmacs, edge_profile, CLOUD_1080TI, input_bytes)
 
-    # Rescale S_i(c) from the calibration geometry to full-res per-sample
-    # bytes: feature bytes scale with (H*W), i.e. (224/64)^2 in quick mode.
+    # Rescale S_i(c) from the calibration unit (bytes per batch of bsz at
+    # the run geometry) to this setup's unit (per-sample at full res, to
+    # match the batch-1 FMAC vectors and per-sample input_bytes above):
+    # divide out the calibration batch and scale features by (H*W), i.e.
+    # (224/64)^2 in quick mode.
     scale = (cfg_full.image_size / cfg_run.image_size) ** 2 / bsz
     tables = PredictorTables(
         points=tables.points,

@@ -23,6 +23,7 @@ MODULES = [
     "fig8_bandwidth",
     "table3_edge_power",
     "ilp_solve_time",
+    "calibration",
     "codec",
     "fleet",
     "pipeline_serving",

@@ -10,19 +10,26 @@ watch the cut move toward the edge as the network gets worse.
 """
 import numpy as np
 
-from repro.config import JaladConfig, get_config
+from repro.config import EDGE_TK1, JaladConfig, get_config
 from repro.data.synthetic import make_batch
 from repro.serving.edge_cloud import build_edge_cloud_server
 
 cfg = get_config("resnet50").reduced()
-jalad = JaladConfig(bits_choices=(2, 4, 8), accuracy_drop_budget=0.10)
+# A slow TK1 edge keeps the optimum bandwidth-sensitive: on the fast TX2
+# default, the byte-minimal late cut wins at every bandwidth of this
+# reduced testbed and there would be nothing to adapt.
+jalad = JaladConfig(bits_choices=(2, 4, 8), accuracy_drop_budget=0.10,
+                    edge=EDGE_TK1)
 server, params = build_edge_cloud_server(cfg, jalad, calib_batches=2,
                                          calib_batch_size=8)
 print(f"server ready: {len(server.engine.tables.points)} candidate cuts")
 
-# a bandwidth trace that collapses and recovers (KB/s):
-trace = [1500, 1000, 600, 300, 100, 50, 100, 300, 1000, 1500]
-batches = [make_batch(cfg, 4, 0, seed=i) for i in range(len(trace))]
+# a bandwidth trace that collapses from broadband to a congested link
+# and recovers (KB/s). Requests reuse the calibration batch size, so the
+# predicted S_i(c)/BW transfer term matches the serving clock's
+# blob.nbytes/BW exactly.
+trace = [10000, 4000, 1500, 600, 100, 50, 100, 600, 4000, 10000]
+batches = [make_batch(cfg, 8, 0, seed=i) for i in range(len(trace))]
 
 print(f"\n{'BW':>8} {'cut':>5} {'bits':>4} {'edge':>8} {'xfer':>8} "
       f"{'cloud':>8} {'total':>8} {'sent':>8}")

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import CLOUD_1080TI, EDGE_TX2, JaladConfig, get_config
+from repro.config import CLOUD_1080TI, EDGE_TK1, JaladConfig, get_config
 from repro.core.decoupler import JaladEngine
 from repro.core.latency import LatencyModel
 from repro.core.predictor import build_tables
@@ -30,21 +30,26 @@ print(f"model: {cfg.arch_id} ({model.param_count()/1e6:.2f}M params, "
 
 # 2. predictors -------------------------------------------------------------
 bits_choices = [2, 4, 8]
-calib = [make_batch(cfg, 8, 0, seed=i) for i in range(2)]
+BATCH = 4
+calib = [make_batch(cfg, BATCH, 0, seed=i) for i in range(2)]
 tables = build_tables(model, params, calib, bits_choices)
 print(f"calibrated A_i(c), S_i(c): base accuracy {tables.base_accuracy:.2f}")
 
 # 3. latency model ----------------------------------------------------------
+# Same per-batch unit everywhere: S_i(c) is bytes per calibration batch,
+# so the FMAC vectors and the raw-input upload are sized for BATCH too.
+# The TK1 edge keeps the cut bandwidth-sensitive on this reduced testbed
+# (on the fast TX2, the byte-minimal late cut wins at every bandwidth).
 lat = LatencyModel(
-    model.per_point_fmacs(1), EDGE_TX2, CLOUD_1080TI,
-    input_bytes=3 * cfg.image_size ** 2,
+    model.per_point_fmacs(BATCH), EDGE_TK1, CLOUD_1080TI,
+    input_bytes=BATCH * 3 * cfg.image_size ** 2,
 )
 
 # 4. decide -----------------------------------------------------------------
 jalad = JaladConfig(bits_choices=tuple(bits_choices),
                     accuracy_drop_budget=0.10)
 engine = JaladEngine(model, tables, lat, jalad)
-for bw in (1e6, 300e3, 50e3):
+for bw in (10e6, 1e6, 50e3):
     plan = engine.decide(bandwidth=bw)
     print(f"BW {bw/1e3:6.0f} KB/s -> cut after {points[plan.point]!r} "
           f"(#{plan.point}), c={plan.bits} bits, "
@@ -52,13 +57,15 @@ for bw in (1e6, 300e3, 50e3):
           f"(solved in {plan.solve_ms:.2f} ms)")
 
 # 5. run decoupled ----------------------------------------------------------
-plan = engine.decide(bandwidth=300e3)
+# Broadband: the ILP picks an early cloud-heavy cut whose (quantized +
+# entropy-coded) interior boundary shows the real compression story.
+plan = engine.decide(bandwidth=10e6)
 runner = engine.make_runner(params, plan)
-batch = make_batch(cfg, 4, 0, seed=99)
+batch = make_batch(cfg, BATCH, 0, seed=99)
 logits, sent_bytes = runner.run(batch)
 full = model.forward(params, batch)
 agree = (np.asarray(logits).argmax(-1) == np.asarray(full).argmax(-1)).mean()
-raw = model.boundary_bytes(4)[plan.point]
+raw = model.boundary_bytes(BATCH)[plan.point]
 print(f"decoupled inference: sent {sent_bytes} B "
       f"(raw boundary {raw} B, {raw/sent_bytes:.1f}x compression), "
       f"top-1 agreement with the undecoupled model: {agree:.2%}")

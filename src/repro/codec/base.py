@@ -125,6 +125,28 @@ class BoundaryCodec(ABC):
         (used by accuracy calibration and ``run_simulated``)."""
         return quantize_dequantize(x, bits)
 
+    # ----------------------------------------------- calibration batching
+    def simulate_batch(self, x: jnp.ndarray, bits_list: Sequence[int]
+                       ) -> jnp.ndarray:
+        """Stack every bit-width choice of one boundary into a single
+        ``(C, *x.shape)`` tensor of the values the cloud would see — the
+        calibration pipeline feeds this to one vmapped tail forward per
+        (point, value transform). The stack happens in-graph (mirroring
+        ``quantize_pack_stack``), so under jit it costs one dispatch, not
+        C. The min/max reductions CSE across bit widths; each slice is
+        bitwise-identical to ``simulate(x, bits)`` alone."""
+        return jnp.stack([self.simulate(x, b) for b in bits_list])
+
+    def transfer_size_batch(self, x: jnp.ndarray, bits_list: Sequence[int]
+                            ) -> List[int]:
+        """Exact per-batch wire sizes of one boundary at every bit width
+        — what the S_i(c, k) calibration records per (point, codec). The
+        base implementation loops ``transfer_size_bytes``: zero device
+        work for fixed-rate codecs (shape-only sizes). Entropy coders
+        override it with a single batched device pass so calibration
+        never pays C host encodes per point."""
+        return [self.transfer_size_bytes(x, b) for b in bits_list]
+
 
 def stackable_shapes(shapes: List[Tuple[int, ...]]) -> bool:
     """True when one batched device launch can cover a stack of boundary

@@ -129,5 +129,12 @@ class BitpackCodec(BoundaryCodec):
         n = int(np.prod(shape)) if shape else 1
         return _payload_bytes(n, bits) + 9
 
+    def transfer_size_batch(self, x: jnp.ndarray, bits_list: Sequence[int]
+                            ) -> List[int]:
+        """Fixed-rate: the whole S_i(c) column is shape-only — zero device
+        launches and zero data passes during calibration."""
+        n = int(x.size)
+        return [_payload_bytes(n, int(b)) + 9 for b in bits_list]
+
 
 register_codec(BitpackCodec())

@@ -140,6 +140,14 @@ class PerChannelCodec(BoundaryCodec):
             return 8 * c + 1
         return c * perchannel_words(n // c, bits) * 4 + 8 * c + 1
 
+    def transfer_size_batch(self, x: jnp.ndarray, bits_list: Sequence[int]
+                            ) -> List[int]:
+        """Fixed-rate: channel-major word count + vector header are both
+        shape-only, so calibration records the whole S_i(c) column with
+        zero device launches."""
+        shape = tuple(x.shape)
+        return [self.wire_size_bytes(shape, int(b)) for b in bits_list]
+
     def simulate(self, x: jnp.ndarray, bits: int) -> jnp.ndarray:
         return q.quantize_dequantize(x, bits, axis=channel_axis(x.ndim))
 

@@ -17,6 +17,7 @@ from repro.core.entropy import (
     huffman_encode,
     huffman_decode,
     huffman_size_bytes,
+    huffman_size_from_counts,
     entropy_size_bytes,
     entropy_bits_per_symbol,
 )
@@ -35,7 +36,12 @@ from repro.core.ilp import (
 )
 from repro.core.latency import LatencyModel, PNG_RATIO, JPEG_RATIO
 from repro.core.planner import PlanSpace
-from repro.core.predictor import PredictorTables, build_tables
+from repro.core.predictor import (
+    PredictorTables,
+    build_tables,
+    build_tables_reference,
+    load_or_build_tables,
+)
 from repro.core.decoupler import (
     DecoupledPlan,
     DecoupledRunner,

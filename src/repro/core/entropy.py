@@ -14,7 +14,7 @@ Two pieces:
 from __future__ import annotations
 
 import heapq
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -294,13 +294,26 @@ def huffman_decode(data: bytes) -> np.ndarray:
     return _decode_chunked(stream, lengths, n)
 
 
+def huffman_size_from_counts(freqs: np.ndarray,
+                             num_symbols: Optional[int] = None) -> int:
+    """Exact encoded size from a symbol histogram alone. The calibration
+    pipeline computes the per-bit-width histograms on device and ships
+    only the ``(num_symbols,)`` counts to the host — this turns them into
+    the same byte count :func:`huffman_size_bytes` reports for the full
+    code array."""
+    freqs = np.asarray(freqs, np.int64).reshape(-1)
+    if num_symbols is None:
+        num_symbols = freqs.shape[0]
+    lengths = _code_lengths(freqs)
+    total_bits = int((freqs * lengths).sum())
+    return 6 + num_symbols + (total_bits + 7) // 8
+
+
 def huffman_size_bytes(codes_arr: np.ndarray, num_symbols: int) -> int:
     """Exact encoded size without materializing the bitstream."""
     flat = np.asarray(codes_arr, np.int64).reshape(-1)
     freqs = np.bincount(flat, minlength=num_symbols).astype(np.int64)
-    lengths = _code_lengths(freqs)
-    total_bits = int((freqs * lengths).sum())
-    return 6 + num_symbols + (total_bits + 7) // 8
+    return huffman_size_from_counts(freqs, num_symbols)
 
 
 # ---------------------------------------------------------------------------

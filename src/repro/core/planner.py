@@ -18,6 +18,17 @@ of the objective once:
 * ``feasible`` — the accuracy-budget mask, folded into ``base`` as +inf so
   infeasible cells can never win the argmin.
 
+**Units.** Every term of the objective is per *calibration batch*:
+``size_flat`` holds ``PredictorTables.size_bytes`` (mean wire bytes of a
+full batch boundary), ``input_bytes`` is the raw bytes of the same batch
+input, and the FMAC time vectors include the batch factor — so decoupled
+and cloud-only (x_NC = 1) candidates are compared in one unit, and the
+predicted transfer term ``S/BW`` equals the serving clock's
+``blob.nbytes / BW`` for a same-sized batch (pinned by
+``tests/test_calibration.py``). Historically S was per-*sample* while
+``input_bytes`` was per-batch, biasing Z against the cloud-only fallback
+by the batch size.
+
 Re-deciding under a new bandwidth is then the single fused numpy op
 
     argmin(base + size_flat / BW)
@@ -93,10 +104,10 @@ class PlanSpace:
     cloud: DeviceProfile
     cum_fmacs: np.ndarray              # (N,) cumulative FMACs at each row
     total_fmacs: float
-    input_bytes: float
+    input_bytes: float                 # raw input bytes PER BATCH
     edge_vec: np.ndarray               # (N,) T_E_i at each row
     cloud_vec: np.ndarray              # (N,) T_C_i at each row
-    size_flat: np.ndarray              # (N, C*K) wire bytes
+    size_flat: np.ndarray              # (N, C*K) wire bytes PER BATCH
     acc_flat: np.ndarray               # (N, C*K) accuracy drop
     feasible: np.ndarray               # (N, C*K) bool, acc <= budget
     # Fused-argmin operands: base = edge + cloud, +inf where infeasible
@@ -176,7 +187,9 @@ class PlanSpace:
     def cloud_only_time(self, bandwidth: float,
                         image_ratio: float = 1.0) -> float:
         """Z of the no-decoupling fallback (upload input, run everything on
-        the cloud) — the paper's x_{NC} = 1 worst case."""
+        the cloud) — the paper's x_{NC} = 1 worst case. ``input_bytes`` is
+        per-batch, the same unit as the ``size_flat`` wire bytes, so this
+        is directly comparable against every decoupled cell."""
         return (self.input_bytes * image_ratio / float(bandwidth)
                 + self.cloud.exec_time(self.total_fmacs))
 

@@ -8,32 +8,69 @@ per-(i, c) accuracy drop and compressed size are stable across epochs — is
 what makes a static lookup table sound; ``test_predictor_stability``
 re-validates it on our testbed.
 
+**Units.** S[i, c, k] is the mean wire size of one *calibration batch*
+(header + payload bytes of the full batch boundary tensor), matching
+``LatencyModel.input_bytes`` (raw bytes of the batch input) and the
+batch-level FMAC vectors — so every term of the planner objective
+``Z = T_E + S/BW + T_C`` and its cloud-only fallback
+``input_bytes/BW + T_C(total)`` is in the same per-batch unit, and the
+predicted transfer time equals the serving clock's ``blob.nbytes / BW``
+for a same-sized batch.
+
+Calibration itself is a vectorized one-pass device-side pipeline
+(:func:`build_tables`): one jitted step per batch runs the full forward,
+taps every decoupling boundary in a single pass (``Model.run_heads``),
+stacks all bit-width choices per (point, value transform) into one
+batched boundary tensor (``BoundaryCodec.simulate_batch``), runs one
+vmapped tail forward over the stack, and accumulates top-1 correctness
+on device — the host sees ONE transfer per batch instead of one per
+(point, bits). Wire sizes come from ``BoundaryCodec.transfer_size_batch``:
+shape-only (zero launches) for fixed-rate codecs, one histogram launch
+per (point, batch) for entropy codecs — instead of C x K host encodes.
+The historical per-cell loop is kept as :func:`build_tables_reference`;
+the two are pinned bitwise-equal by ``tests/test_calibration.py``.
+
 Codecs that share a *value transform* (``BoundaryCodec.value_key``, e.g.
 huffman and bitpack both reconstruct the per-tensor quantization) share
 one tail forward during calibration; only their wire sizes differ.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import os
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.models.api import Model
 
+# Bumped whenever the table semantics change (e.g. the per-sample ->
+# per-batch S_i(c,k) unit fix): a stale on-disk cache must never be
+# mistaken for a table built under the current convention.
+TABLE_FORMAT_VERSION = 2
+
 
 @dataclass
 class PredictorTables:
-    """A[i, c, k] = accuracy drop; S[i, c, k] = mean compressed bytes per
-    sample, for decoupling point i, bit width c, boundary codec k."""
+    """A[i, c, k] = accuracy drop; S[i, c, k] = mean compressed wire bytes
+    **per calibration batch**, for decoupling point i, bit width c,
+    boundary codec k.
+
+    The per-batch unit is load-bearing: ``PlanSpace`` charges
+    ``S[i, c, k] / BW`` against ``input_bytes / BW`` (also per batch) and
+    the serving clock's ``blob.nbytes / BW`` (the batch blob), so all
+    three must share the batch granularity of the calibration batches.
+    """
 
     points: List[str]
     bits_choices: List[int]
     codecs: List[str]
     acc_drop: np.ndarray          # (N, C, K)
-    size_bytes: np.ndarray        # (N, C, K)
+    size_bytes: np.ndarray        # (N, C, K) bytes per calibration batch
     base_accuracy: float
 
     # ------------------------------------------------------------- views
@@ -46,12 +83,19 @@ class PredictorTables:
         return self.acc_drop[:, :, k]
 
     def sizes(self, codec: Optional[str] = None) -> np.ndarray:
-        """(N, C) wire-size table of one codec (default: first)."""
+        """(N, C) per-batch wire-size table of one codec (default: first)."""
         k = self.codec_index(codec) if codec else 0
         return self.size_bytes[:, :, k]
 
     # -------------------------------------------------------- persistence
+    @staticmethod
+    def _npz_path(path: str) -> str:
+        # np.savez silently appends ".npz" to bare paths; normalize so
+        # save(p) and load(p) always agree on the on-disk name.
+        return path if path.endswith(".npz") else path + ".npz"
+
     def save(self, path: str) -> None:
+        path = self._npz_path(path)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         np.savez(
             path,
@@ -65,6 +109,8 @@ class PredictorTables:
 
     @classmethod
     def load(cls, path: str) -> "PredictorTables":
+        if not os.path.exists(path):
+            path = cls._npz_path(path)
         z = np.load(path, allow_pickle=False)
         acc = z["acc_drop"]
         size = z["size_bytes"]
@@ -83,11 +129,117 @@ class PredictorTables:
             base_accuracy=float(z["base_accuracy"]),
         )
 
+    # --------------------------------------------------------- cache key
+    @staticmethod
+    def cache_key(arch_id: str, bits_choices: Sequence[int],
+                  codecs: Sequence[str],
+                  points: Optional[Sequence[int]] = None,
+                  **calib) -> str:
+        """Deterministic hash of everything the tables depend on (model
+        id, choice axes, sampled points, and the calibration recipe —
+        pass seed / batch counts / geometry as keyword args). Used by
+        ``build_edge_cloud_server`` to name on-disk table files so server
+        startup can skip recalibration entirely on a config it has seen."""
+        payload = {
+            "format": TABLE_FORMAT_VERSION,
+            "arch": str(arch_id),
+            "bits": [int(b) for b in bits_choices],
+            "codecs": [str(c) for c in codecs],
+            "points": None if points is None else [int(p) for p in points],
+            "calib": {k: calib[k] for k in sorted(calib)},
+        }
+        blob = json.dumps(payload, sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()[:20]
+
+
+@dataclass
+class CalibrationStats:
+    """Host/device traffic of the last ``build_tables*`` call — what the
+    calibration benchmark reports as launch/sync counts."""
+
+    batches: int = 0
+    step_dispatches: int = 0     # jitted dispatches carrying tail forwards
+    host_syncs: int = 0          # device->host result fetches (accuracy)
+    size_calls: int = 0          # transfer_size_batch / per-cell size calls
+    tail_forwards: int = 0       # tail forward executions (both paths)
+
+
+#: Stats of the most recent build_tables / build_tables_reference call.
+LAST_BUILD_STATS = CalibrationStats()
+
 
 def _top1(logits: np.ndarray) -> np.ndarray:
     if logits.ndim == 3:          # LM: use final position
         logits = logits[:, -1]
     return logits.argmax(-1)
+
+
+def _batch_size(batch: Dict, labels_key: str) -> int:
+    if labels_key in batch:
+        return int(np.shape(batch[labels_key])[0])
+    return int(np.shape(next(iter(batch.values())))[0])
+
+
+# ---------------------------------------------------------------------------
+# Vectorized one-pass calibration (the default path)
+# ---------------------------------------------------------------------------
+
+
+def _make_calib_step(model: Model, pts: Tuple[int, ...],
+                     bits: Tuple[int, ...], key_codecs, labels_key: str):
+    """One jitted calibration step: full forward + every boundary from a
+    single tapped pass + one vmapped tail per (point, value transform)
+    over the bit-stacked boundaries + on-device top-1 accumulation.
+    Returns (base_ok, counts (P, n_keys, C), boundaries) — the host syncs
+    once for the accuracy half; boundaries stay on device for the codecs'
+    batched wire-size measurement."""
+    is_lm = model.cfg.family != "cnn"
+
+    def top1(lg):
+        if is_lm:                 # (.., S, V): score the final position
+            lg = lg[..., -1, :]
+        return jnp.argmax(lg, axis=-1)
+
+    def step(params, batch):
+        logits = model.forward(params, batch)
+        base_pred = top1(logits)
+        ref = batch[labels_key] if labels_key in batch else base_pred
+        base_ok = (base_pred == ref).sum()
+        if not pts or not bits:
+            counts = jnp.zeros((len(pts), len(key_codecs), len(bits)),
+                               jnp.int32)
+            return base_ok, counts, ()
+        heads = model.run_heads(params, batch, pts)
+        counts = []
+        boundaries = []
+        for point, (boundary, extras) in zip(pts, heads):
+            boundaries.append(boundary)
+            per_key = []
+            for codec in key_codecs:
+                xq = codec.simulate_batch(boundary, bits)   # (C, *shape)
+
+                def tail(xb, point=point, extras=extras):
+                    if extras is not None:
+                        return model.run_tail(params, xb, point, extras)
+                    return model.run_tail(params, xb, point)
+
+                preds = top1(jax.vmap(tail)(xq))            # (C, B)
+                per_key.append((preds == ref[None]).sum(axis=1))
+            counts.append(jnp.stack(per_key))
+        return base_ok, jnp.stack(counts), tuple(boundaries)
+
+    return jax.jit(step)
+
+
+def _calib_step(model: Model, pts, bits, key_codecs, labels_key: str):
+    # The jitted step is cached on the model instance so repeated builds
+    # (benchmark timing, server restarts in one process) skip re-tracing.
+    cache = model.__dict__.setdefault("_calib_step_cache", {})
+    key = (pts, bits, tuple(c.name for c in key_codecs), labels_key)
+    if key not in cache:
+        cache[key] = _make_calib_step(model, pts, bits, key_codecs,
+                                      labels_key)
+    return cache[key]
 
 
 def build_tables(
@@ -100,12 +252,101 @@ def build_tables(
     points: Optional[Sequence[int]] = None,
     labels_key: str = "labels",
 ) -> PredictorTables:
-    """Run calibration: for each decoupling point i, bit width c and codec
-    k, reconstruct the boundary the cloud would see and measure (a) the
-    accuracy drop vs the un-quantized model, (b) the exact wire size.
-    Codecs with the same ``value_key`` share the tail forward."""
+    """Vectorized one-pass calibration (see module docstring): for each
+    decoupling point i, bit width c and codec k, reconstruct the boundary
+    the cloud would see and measure (a) the accuracy drop vs the
+    un-quantized model, (b) the exact per-batch wire size. Bitwise-equal
+    tables to :func:`build_tables_reference`, built from one jitted
+    device dispatch + one host sync per batch."""
+    global LAST_BUILD_STATS
     # Lazy: repro.codec depends on repro.core.quantization; importing it at
     # module scope would cycle when repro.codec is imported first.
+    from repro.codec import get_codec
+
+    names = model.decoupling_points()
+    pts = tuple(points) if points is not None else tuple(range(len(names)))
+    bits_t = tuple(int(b) for b in bits_choices)
+    codec_objs = [get_codec(c) for c in codecs]
+    nC, nK, nP = len(bits_t), len(codec_objs), len(pts)
+
+    # Distinct value transforms in first-appearance order: codecs sharing
+    # a value_key share one vmapped tail forward.
+    key_order: List[str] = []
+    key_rep: Dict[str, object] = {}
+    for c in codec_objs:
+        if c.value_key not in key_rep:
+            key_rep[c.value_key] = c
+            key_order.append(c.value_key)
+    key_of = [key_order.index(c.value_key) for c in codec_objs]
+    reps = tuple(key_rep[k] for k in key_order)
+
+    step = _calib_step(model, pts, bits_t, reps, labels_key)
+    stats = CalibrationStats()
+
+    correct_base = 0
+    total = 0
+    correct = np.zeros((nP, len(key_order), nC), np.int64)
+    sizes = np.zeros((nP, nC, nK))
+    n_batches = 0
+
+    for batch in batches:
+        n_batches += 1
+        stats.batches += 1
+        base_ok, counts, boundaries = step(params, batch)
+        stats.step_dispatches += 1
+        stats.tail_forwards += nP * len(key_order)
+        base_ok, counts = jax.device_get((base_ok, counts))
+        stats.host_syncs += 1
+        total += _batch_size(batch, labels_key)
+        correct_base += int(base_ok)
+        correct += np.asarray(counts, np.int64)
+        # Degenerate C=0 matches the reference (empty-axis tables): the
+        # step returned no boundaries, and there are no cells to size.
+        for pi in range(nP if bits_t else 0):
+            for ki, codec in enumerate(codec_objs):
+                sz = codec.transfer_size_batch(boundaries[pi], bits_t)
+                stats.size_calls += 1
+                for ci in range(nC):
+                    sizes[pi, ci, ki] += sz[ci]
+
+    base_acc = correct_base / max(total, 1)
+    acc_counts = np.zeros((nP, nC, nK))
+    for ki in range(nK):
+        acc_counts[:, :, ki] = correct[:, key_of[ki], :]
+    acc = acc_counts / max(total, 1)
+    LAST_BUILD_STATS = stats
+    return PredictorTables(
+        points=[names[p] for p in pts],
+        bits_choices=list(bits_t),
+        codecs=list(codecs),
+        acc_drop=np.maximum(base_acc - acc, 0.0),
+        size_bytes=sizes / max(n_batches, 1),
+        base_accuracy=base_acc,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference loop path (the pre-vectorization implementation, kept as the
+# bitwise-equality oracle and benchmark baseline)
+# ---------------------------------------------------------------------------
+
+
+def build_tables_reference(
+    model: Model,
+    params,
+    batches: Sequence[Dict],
+    bits_choices: Sequence[int],
+    *,
+    codecs: Sequence[str] = ("huffman",),
+    points: Optional[Sequence[int]] = None,
+    labels_key: str = "labels",
+) -> PredictorTables:
+    """The historical ``batches x points x bits x codecs`` loop: one
+    jitted tail launch and one host sync per (point, bits) cell, one host
+    encode per (point, bits, codec) wire size. Kept as the oracle the
+    vectorized :func:`build_tables` is pinned bitwise-equal to, and as
+    the calibration benchmark's baseline."""
+    global LAST_BUILD_STATS
     from repro.codec import get_codec
 
     names = model.decoupling_points()
@@ -113,6 +354,7 @@ def build_tables(
     nC = len(bits_choices)
     codec_objs = [get_codec(c) for c in codecs]
     nK = len(codec_objs)
+    stats = CalibrationStats()
 
     head = jax.jit(model.run_head, static_argnums=2)
     tail = jax.jit(model.run_tail, static_argnums=2)
@@ -126,13 +368,14 @@ def build_tables(
 
     for batch in batches:
         n_batches += 1
+        stats.batches += 1
         labels = np.asarray(batch[labels_key]) if labels_key in batch else None
         base_logits = np.asarray(full(params, batch))
+        stats.host_syncs += 1
         base_pred = _top1(base_logits)
         ref = labels if labels is not None else base_pred
         correct_base += int((base_pred == ref).sum())
-        bsz = ref.shape[0]
-        total += bsz
+        total += ref.shape[0]
 
         for pi, point in enumerate(pts):
             out = head(params, batch, point)
@@ -148,17 +391,27 @@ def build_tables(
                             if extras is not None
                             else tail(params, xq, point)
                         )
+                        stats.step_dispatches += 1
+                        stats.host_syncs += 1
+                        stats.tail_forwards += 1
                         n_ok_by_key[key] = int(
                             (_top1(logits) == ref).sum()
                         )
                     correct[pi, ci, ki] += n_ok_by_key[key]
-                    sizes[pi, ci, ki] += (
-                        codec.transfer_size_bytes(boundary, bits) / bsz
+                    # Per-batch wire bytes: the full batch boundary's exact
+                    # size, NOT divided by the batch size — the same unit
+                    # as LatencyModel.input_bytes and the serving clock's
+                    # blob.nbytes (the historical /bsz here biased the
+                    # planner against cloud-only by a factor of bsz).
+                    sizes[pi, ci, ki] += codec.transfer_size_bytes(
+                        boundary, bits
                     )
+                    stats.size_calls += 1
 
     base_acc = correct_base / max(total, 1)
     acc = correct / max(total, 1)
-    tables = PredictorTables(
+    LAST_BUILD_STATS = stats
+    return PredictorTables(
         points=[names[p] for p in pts],
         bits_choices=list(bits_choices),
         codecs=list(codecs),
@@ -166,4 +419,23 @@ def build_tables(
         size_bytes=sizes / max(n_batches, 1),
         base_accuracy=base_acc,
     )
-    return tables
+
+
+# ---------------------------------------------------------------------------
+# Load-or-build persistence
+# ---------------------------------------------------------------------------
+
+
+def load_or_build_tables(cache_dir: Optional[str], key: str, builder
+                         ) -> Tuple[PredictorTables, bool]:
+    """Return ``(tables, cache_hit)``: load ``<cache_dir>/tables-<key>.npz``
+    when present, otherwise call ``builder()`` and persist the result.
+    ``cache_dir=None`` disables persistence (always builds)."""
+    if not cache_dir:
+        return builder(), False
+    path = os.path.join(cache_dir, f"tables-{key}.npz")
+    if os.path.exists(path):
+        return PredictorTables.load(path), True
+    tables = builder()
+    tables.save(path)
+    return tables, False

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import sys
+import time
 
 import jax
 import numpy as np
@@ -85,9 +86,14 @@ def serve_jalad(args) -> int:
     jc = JaladConfig(bandwidth_bytes_per_s=args.bandwidth,
                      accuracy_drop_budget=args.acc_drop,
                      codec_choices=codecs)
-    server, params = build_edge_cloud_server(cfg, jc, seed=args.seed,
-                                             calib_batches=args.calib,
-                                             calib_batch_size=args.batch)
+    t0 = time.perf_counter()
+    server, params = build_edge_cloud_server(
+        cfg, jc, seed=args.seed, calib_batches=args.calib,
+        calib_batch_size=args.batch,
+        tables_cache_dir=args.tables_cache or None)
+    log.info("server ready in %.2fs (tables cache: %s)",
+             time.perf_counter() - t0,
+             args.tables_cache or "disabled")
     if args.pipeline:
         return _serve_jalad_pipelined(args, server, params)
     batch = make_batch(cfg, args.batch, 64, seed=args.seed + 1)
@@ -152,6 +158,11 @@ def main(argv=None) -> int:
                     help="boundary codec for --jalad: a registry id "
                          "(huffman|bitpack|perchannel) or 'auto' to let "
                          "the ILP choose among all registered codecs")
+    ap.add_argument("--tables-cache", default="",
+                    help="directory for config-hashed predictor-table "
+                         "persistence; a second start with the same "
+                         "config loads the tables and skips calibration "
+                         "(empty = always recalibrate)")
     ap.add_argument("--acc-drop", type=float, default=0.10)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--calib", type=int, default=2)

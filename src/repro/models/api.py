@@ -201,6 +201,33 @@ class Model:
                                        upto=point + 1)
         return _transformer_head(self, params, batch, point)
 
+    def run_heads(self, params, batch, points) -> List[Tuple[Any, Any]]:
+        """Boundaries at several decoupling points from ONE forward pass,
+        as ``(boundary, extras)`` pairs in ``points`` order.
+
+        For CNNs this taps the activation after each requested layer in a
+        single sweep — calling ``run_head`` per point re-runs the shared
+        prefix, O(N^2) layer executions over a calibration grid. Other
+        families fall back to per-point ``run_head`` (normalized to
+        pairs); traced inside one jitted program that is still a single
+        dispatch. This is the calibration pipeline's head stage."""
+        pts = list(points)
+        if not pts:
+            return []
+        cfg = self.cfg
+        if cfg.family == "cnn":
+            layers = cnn_lib.build_layers(cfg)
+            want = set(pts)
+            taps: Dict[int, Any] = {}
+            x = batch["images"]
+            for i, lyr in enumerate(layers[: max(want) + 1]):
+                x = lyr.apply(params[lyr.name], x)
+                if i in want:
+                    taps[i] = x
+            return [(taps[p], None) for p in pts]
+        outs = [self.run_head(params, batch, p) for p in pts]
+        return [o if isinstance(o, tuple) else (o, None) for o in outs]
+
     def run_tail(self, params, boundary, point: int, extras=None):
         cfg = self.cfg
         if cfg.family == "cnn":

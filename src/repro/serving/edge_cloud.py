@@ -92,10 +92,10 @@ class EdgeCloudServer:
 
     engine: JaladEngine
     params: Any
-    controller: AdaptationController = None
+    controller: Optional[AdaptationController] = None
     clock: float = 0.0
     log: List[LatencyBreakdown] = field(default_factory=list)
-    runners: RunnerCache = None
+    runners: Optional[RunnerCache] = None
 
     def __post_init__(self):
         if self.controller is None:
@@ -116,8 +116,11 @@ class EdgeCloudServer:
             # numerics: full model on the "cloud" (jitted once, cached)
             logits = self.runners.full_forward()(self.params, batch)
             nbytes = int(space.input_bytes * PNG_RATIO)
+            # The fallback ships a PNG-compressed input image, not an
+            # empty-string non-codec — the log must say which wire format
+            # the transfer term was charged for.
             bd = LatencyBreakdown(edge_t, nbytes / bandwidth, cloud_t,
-                                  nbytes, -1, 0)
+                                  nbytes, -1, 0, "png")
         else:
             runner = self._runner(plan)
             blob, extras = runner.edge_step(batch)
@@ -178,35 +181,66 @@ def build_edge_cloud_server(
     seq_len: int = 64,
     params: Any = None,
     points: Optional[List[int]] = None,
+    tables_cache_dir: Optional[str] = None,
 ) -> Tuple[EdgeCloudServer, Any]:
     """End-to-end factory: model -> calibration -> predictors -> latency
     model -> ILP engine -> server. The calibration measures accuracy drop
     against the un-quantized model's own predictions when no labels exist
     (prediction fidelity), exactly how A_i(c) behaves for a deployed
-    pre-trained model."""
+    pre-trained model.
+
+    Every latency term the engine compares is per *calibration batch*:
+    the S_i(c, k) tables (exact batch-blob wire bytes), ``input_bytes``
+    (raw batch input) and the FMAC vectors (batch included) — so
+    decoupled plans, the cloud-only fallback and the serving clock all
+    agree on units.
+
+    ``tables_cache_dir`` enables config-hashed table persistence: when a
+    ``tables-<cache_key>.npz`` for this exact (arch, bits, codecs,
+    points, calibration recipe, seed) exists there, startup loads it and
+    skips recalibration entirely. Ignored when ``params`` is supplied by
+    the caller (the tables depend on weights we cannot hash cheaply)."""
     import jax
 
-    from repro.core.predictor import build_tables
+    from repro.core.predictor import (
+        PredictorTables,
+        build_tables,
+        load_or_build_tables,
+    )
     from repro.data.synthetic import make_batch
     from repro.models.api import build_model
 
     model = build_model(cfg)
+    caller_params = params is not None
     if params is None:
         params = model.init(jax.random.key(seed))
-    batches = [
-        make_batch(cfg, calib_batch_size, seq_len, seed=seed + 10 + i)
-        for i in range(calib_batches)
-    ]
     n_points = len(model.decoupling_points())
     if points is None and n_points > 24:
         # Subsample decoupling points for deep models (keeps calibration
         # tractable; the ILP operates on the sampled rows).
         step = max(n_points // 16, 1)
         points = list(range(0, n_points, step))
-    tables = build_tables(model, params, batches,
-                          list(jalad_cfg.bits_choices),
-                          codecs=list(jalad_cfg.codec_choices),
-                          points=points)
+
+    def calibrate() -> PredictorTables:
+        batches = [
+            make_batch(cfg, calib_batch_size, seq_len, seed=seed + 10 + i)
+            for i in range(calib_batches)
+        ]
+        return build_tables(model, params, batches,
+                            list(jalad_cfg.bits_choices),
+                            codecs=list(jalad_cfg.codec_choices),
+                            points=points)
+
+    cache_dir = None if caller_params else tables_cache_dir
+    key = PredictorTables.cache_key(
+        cfg.arch_id, jalad_cfg.bits_choices, jalad_cfg.codec_choices,
+        points=points, seed=seed, calib_batches=calib_batches,
+        calib_batch_size=calib_batch_size, seq_len=seq_len,
+        # The full config repr: reduced() variants share the arch_id but
+        # must never share a table file.
+        config=repr(cfg),
+    )
+    tables, _ = load_or_build_tables(cache_dir, key, calibrate)
     if cfg.family == "cnn":
         input_bytes = calib_batch_size * 3 * cfg.image_size * cfg.image_size
     else:

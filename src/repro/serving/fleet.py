@@ -158,14 +158,14 @@ class FleetServer:
             tl.bytes_sent = nbytes
             tl.plan_point = plan.point
             tl.plan_bits = plan.bits
-            tl.plan_codec = plan.codec if not plan.is_cloud_only else ""
+            tl.plan_codec = plan.codec if not plan.is_cloud_only else "png"
             dev.controller.observe_transfer(max(nbytes, 1),
                                             max(transfer_t, 1e-9))
             r.breakdown = LatencyBreakdown(
                 edge_t, transfer_t, cloud_t, nbytes,
                 plan.point if not plan.is_cloud_only else -1,
                 plan.bits if not plan.is_cloud_only else 0,
-                plan.codec if not plan.is_cloud_only else "",
+                plan.codec if not plan.is_cloud_only else "png",
             )
 
     def _cloud_phase(self, reqs: List[FleetRequest]) -> List[FleetRequest]:

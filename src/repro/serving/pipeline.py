@@ -258,7 +258,7 @@ class PipelinedEdgeCloudServer:
             self._cloud_free = tl.cloud_end
             tl.plan_point = plan.point
             tl.plan_bits = plan.bits
-            tl.plan_codec = plan.codec if not plan.is_cloud_only else ""
+            tl.plan_codec = plan.codec if not plan.is_cloud_only else "png"
             req._blob = req._extras = None
             self.completed.append(req)
 

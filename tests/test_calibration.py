@@ -1,0 +1,268 @@
+"""Calibration pipeline: the vectorized one-pass ``build_tables`` is
+pinned bitwise-equal to the ``build_tables_reference`` loop, table
+persistence round-trips (incl. bare paths and pre-codec 2-D files), and
+the planner objective / serving clock agree on the per-batch S_i(c, k)
+unit."""
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.codec import get_codec
+from repro.config import JaladConfig, get_config
+from repro.core.predictor import (
+    PredictorTables,
+    build_tables,
+    build_tables_reference,
+    load_or_build_tables,
+)
+from repro.data.synthetic import make_batch
+from repro.serving.edge_cloud import build_edge_cloud_server
+
+
+def _assert_tables_equal(a: PredictorTables, b: PredictorTables):
+    assert a.points == b.points
+    assert a.bits_choices == b.bits_choices
+    assert a.codecs == b.codecs
+    np.testing.assert_array_equal(a.acc_drop, b.acc_drop)
+    np.testing.assert_array_equal(a.size_bytes, b.size_bytes)
+    assert a.base_accuracy == b.base_accuracy
+
+
+# --------------------------------------------------- vectorized == loop
+
+
+CODEC_POOLS = [
+    ("huffman",),
+    ("bitpack", "huffman"),                  # shared "tensor" value key
+    ("huffman", "perchannel"),               # two distinct value keys
+    ("perchannel", "bitpack", "huffman"),
+]
+
+
+def test_vectorized_equals_reference_randomized():
+    """Seeded random (points, bits, codecs) instances on the CNN testbed:
+    the one-pass device pipeline must reproduce the per-cell loop's
+    tables bit for bit — sizes, accuracy drops and base accuracy."""
+    model, params = reduced_model("resnet50")
+    n = len(model.decoupling_points())
+    rng = np.random.default_rng(0)
+    for trial in range(3):
+        pts = sorted(rng.choice(n, size=3, replace=False).tolist())
+        bits = sorted(rng.choice([2, 3, 4, 8], size=2, replace=False)
+                      .tolist())
+        codecs = CODEC_POOLS[int(rng.integers(len(CODEC_POOLS)))]
+        batches = [make_batch(model.cfg, 4, 0, seed=100 + trial)]
+        ref = build_tables_reference(model, params, batches, bits,
+                                     codecs=codecs, points=pts)
+        vec = build_tables(model, params, batches, bits,
+                           codecs=codecs, points=pts)
+        _assert_tables_equal(ref, vec)
+
+
+def test_vectorized_equals_reference_lm():
+    """The non-CNN head fallback (per-point run_head inside one jitted
+    step) must match the loop path too — transformer boundaries, extras
+    threading, final-position top-1."""
+    model, params = reduced_model("olmo-1b")
+    n = len(model.decoupling_points())
+    pts = [0, n - 1]
+    batches = [make_batch(model.cfg, 2, 12, seed=7)]
+    ref = build_tables_reference(model, params, batches, [2, 8],
+                                 codecs=("huffman", "bitpack"), points=pts)
+    vec = build_tables(model, params, batches, [2, 8],
+                       codecs=("huffman", "bitpack"), points=pts)
+    _assert_tables_equal(ref, vec)
+
+
+def test_vectorized_respects_labels():
+    """With labels in the batch, correctness counts against the labels
+    (not the base prediction) — both paths, still bitwise-equal."""
+    model, params = reduced_model("resnet50")
+    batches = [make_batch(model.cfg, 4, 0, seed=3)]
+    assert "labels" in batches[0]
+    ref = build_tables_reference(model, params, batches, [4],
+                                 codecs=("bitpack",), points=[1])
+    vec = build_tables(model, params, batches, [4],
+                       codecs=("bitpack",), points=[1])
+    _assert_tables_equal(ref, vec)
+    assert 0.0 <= ref.base_accuracy <= 1.0
+
+
+# ----------------------------------------------------------- persistence
+
+
+def _toy_tables() -> PredictorTables:
+    rng = np.random.default_rng(1)
+    return PredictorTables(
+        points=["a", "b"], bits_choices=[2, 8], codecs=["huffman"],
+        acc_drop=rng.random((2, 2, 1)),
+        size_bytes=rng.random((2, 2, 1)) * 1e4,
+        base_accuracy=0.75,
+    )
+
+
+def test_save_load_bare_path(tmp_path):
+    """np.savez appends '.npz' silently; save/load must agree on the
+    on-disk name for bare AND suffixed paths."""
+    t = _toy_tables()
+    bare = str(tmp_path / "tables")
+    t.save(bare)
+    _assert_tables_equal(t, PredictorTables.load(bare))
+    _assert_tables_equal(t, PredictorTables.load(bare + ".npz"))
+    suffixed = str(tmp_path / "explicit.npz")
+    t.save(suffixed)
+    _assert_tables_equal(t, PredictorTables.load(suffixed))
+
+
+def test_pre_codec_2d_npz_backcompat(tmp_path):
+    """Table files written before the codec axis existed (2-D acc/size,
+    no 'codecs' key) load as (N, C, 1) huffman tables."""
+    rng = np.random.default_rng(2)
+    acc = rng.random((3, 2))
+    size = rng.random((3, 2)) * 1e3
+    path = str(tmp_path / "legacy.npz")
+    np.savez(path, acc_drop=acc, size_bytes=size, base_accuracy=0.5,
+             points=np.array(["p0", "p1", "p2"]),
+             bits_choices=np.array([2, 8]))
+    t = PredictorTables.load(path)
+    assert t.codecs == ["huffman"]
+    assert t.acc_drop.shape == (3, 2, 1)
+    np.testing.assert_array_equal(t.acc_drop[:, :, 0], acc)
+    np.testing.assert_array_equal(t.size_bytes[:, :, 0], size)
+
+
+def test_load_or_build_roundtrip(tmp_path):
+    calls = []
+
+    def builder():
+        calls.append(1)
+        return _toy_tables()
+
+    t1, hit1 = load_or_build_tables(str(tmp_path), "k0", builder)
+    t2, hit2 = load_or_build_tables(str(tmp_path), "k0", builder)
+    assert (hit1, hit2) == (False, True)
+    assert len(calls) == 1              # second call skipped calibration
+    _assert_tables_equal(t1, t2)
+    # A different key must rebuild, not collide.
+    _, hit3 = load_or_build_tables(str(tmp_path), "k1", builder)
+    assert not hit3 and len(calls) == 2
+    # Disabled cache always builds.
+    _, hit4 = load_or_build_tables(None, "k0", builder)
+    assert not hit4 and len(calls) == 3
+
+
+def test_cache_key_sensitivity():
+    k = PredictorTables.cache_key("resnet50", (2, 8), ("huffman",),
+                                  points=[0, 1], seed=0)
+    same = PredictorTables.cache_key("resnet50", (2, 8), ("huffman",),
+                                     points=[0, 1], seed=0)
+    assert k == same
+    assert k != PredictorTables.cache_key("resnet50", (2, 4), ("huffman",),
+                                          points=[0, 1], seed=0)
+    assert k != PredictorTables.cache_key("resnet50", (2, 8), ("bitpack",),
+                                          points=[0, 1], seed=0)
+    assert k != PredictorTables.cache_key("resnet50", (2, 8), ("huffman",),
+                                          points=[0, 2], seed=0)
+    assert k != PredictorTables.cache_key("resnet50", (2, 8), ("huffman",),
+                                          points=[0, 1], seed=1)
+
+
+# ------------------------------------------- per-batch unit consistency
+
+
+@pytest.fixture(scope="module")
+def unit_server():
+    """A server calibrated with a fixed-rate codec so S_i(c, k) is
+    exactly shape-determined: predicted transfer must equal the serving
+    clock's to the bit."""
+    cfg = get_config("resnet50").reduced()
+    jc = JaladConfig(bits_choices=(2, 4, 8), accuracy_drop_budget=0.5,
+                     codec_choices=("bitpack",))
+    srv, _ = build_edge_cloud_server(
+        cfg, jc, calib_batches=1, calib_batch_size=4,
+        points=[2, 6, 10, 14],
+    )
+    return srv
+
+
+def test_sizes_are_per_batch(unit_server):
+    """S_i(c, k) records the wire bytes of the FULL calibration batch —
+    the same granularity as input_bytes — not per-sample bytes."""
+    eng = unit_server.engine
+    model = eng.model
+    codec = get_codec("bitpack")
+    bsz = 4
+    raw = model.boundary_bytes(bsz)          # float32 bytes per point
+    for row, point in enumerate(eng.point_indices):
+        n_elems = raw[point] // 4
+        for ci, bits in enumerate(eng.tables.bits_choices):
+            expect = codec.wire_size_bytes((n_elems,), bits)
+            assert eng.tables.size_bytes[row, ci, 0] == expect
+    # input_bytes is the raw bytes of the same batch (24-bit RGB).
+    cfg = model.cfg
+    assert eng.latency.input_bytes == bsz * 3 * cfg.image_size ** 2
+
+
+def test_predicted_transfer_matches_serving_clock(unit_server):
+    """The unit-mismatch regression pin: serve a batch of the calibration
+    size and the serving clock's ``blob.nbytes / BW`` transfer term must
+    equal the planner's predicted ``S_i(c, k) / BW`` exactly, and
+    ``plan_cost`` must decompose into the served stage times."""
+    srv = unit_server
+    space = srv.engine.plan_space
+    bw = 300e3
+    batch = make_batch(srv.engine.model.cfg, 4, 0, seed=42)
+    _, bd = srv.serve_batch(batch, bandwidth=bw)
+    assert bd.plan_point >= 0, "expected a decoupled plan at this BW"
+    plan = srv.controller.plan
+    row = space.row_of_point(plan.point)
+    j = (space.bits_choices.index(plan.bits) * len(space.codecs)
+         + space.codecs.index(plan.codec))
+    # Exact: the fixed-rate S table IS the served blob's byte count.
+    assert bd.bytes_sent == space.size_flat[row, j]
+    assert bd.transfer_s == space.size_flat[row, j] / bw
+    # plan_cost == the serving clock's edge + transfer + cloud.
+    assert space.plan_cost(plan, bw) == pytest.approx(bd.total_s, rel=1e-12)
+    assert (bd.edge_s, bd.cloud_s) == space.stage_times(plan)
+
+
+def test_cloud_only_and_decoupled_share_units(unit_server):
+    """Z(cloud-only) and Z(decoupled) are compared in the same per-batch
+    unit: the fallback charges the batch's raw input upload, decoupled
+    cells charge the batch blob — neither is per-sample."""
+    srv = unit_server
+    space = srv.engine.plan_space
+    bw = 300e3
+    cloud_only = space.cloud_only_time(bw)
+    expect = (space.input_bytes / bw
+              + space.cloud.exec_time(space.total_fmacs))
+    assert cloud_only == pytest.approx(expect, rel=1e-12)
+    # The decoupled objective uses the same bandwidth divisor on
+    # same-unit bytes: scaling BOTH by the batch size cancels out in the
+    # comparison, and a per-sample S would skew it by exactly bsz.
+    plan = srv.engine.decide(bandwidth=bw)
+    if not plan.is_cloud_only:
+        cost = space.plan_cost(plan, bw)
+        row = space.row_of_point(plan.point)
+        j = (space.bits_choices.index(plan.bits) * len(space.codecs)
+             + space.codecs.index(plan.codec))
+        transfer = space.size_flat[row, j] / bw
+        assert cost == pytest.approx(
+            space.edge_vec[row] + space.cloud_vec[row] + transfer,
+            rel=1e-12,
+        )
+
+
+def test_serve_batch_cloud_only_codec_marker():
+    """The cloud-only fallback's LatencyBreakdown names its wire format
+    ('png'), not the empty-string default."""
+    cfg = get_config("resnet50").reduced()
+    # An impossible accuracy budget forces the cloud-only fallback.
+    jc = JaladConfig(bits_choices=(2,), accuracy_drop_budget=-1.0,
+                     codec_choices=("bitpack",))
+    srv, _ = build_edge_cloud_server(cfg, jc, calib_batches=1,
+                                     calib_batch_size=2, points=[2])
+    batch = make_batch(cfg, 2, 0, seed=5)
+    _, bd = srv.serve_batch(batch, bandwidth=1e6)
+    assert bd.plan_point == -1
+    assert bd.plan_codec == "png"

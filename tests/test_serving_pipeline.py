@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from conftest import reduced_model
-from repro.config import JaladConfig, ServeConfig, get_config
+from repro.config import EDGE_TK1, JaladConfig, ServeConfig, get_config
 from repro.core.adaptation import AdaptationController
 from repro.data.synthetic import make_batch
 from repro.serving.edge_cloud import EdgeCloudServer, build_edge_cloud_server
@@ -184,6 +184,12 @@ def test_adaptation_on_bandwidth_step_change(jalad_setup):
     through the live estimator (link-stage observations -> EWMA ->
     controller), and the listener hook must fire for it."""
     engine, params, cfg = jalad_setup
+    # A slow edge (TK1) keeps the optimum bandwidth-sensitive: with the
+    # corrected per-batch S_i(c, k) a fast TX2 edge makes the byte-minimal
+    # late cut optimal at EVERY bandwidth, so there is nothing to adapt.
+    # On TK1 the high-BW optimum is an early cloud-heavy cut that the
+    # collapse must abandon.
+    engine = engine.for_edge(EDGE_TK1)
     controller = AdaptationController(engine)
     # micro_batch=1 keeps the per-request plan-decision granularity this
     # test schedules around (micro-batching coarsens adaptation to one
@@ -246,6 +252,7 @@ def test_adaptation_fires_under_microbatching(jalad_setup):
     drained group, but a sustained bandwidth collapse must still move the
     plan within a few groups."""
     engine, params, cfg = jalad_setup
+    engine = engine.for_edge(EDGE_TK1)   # see step-change test above
     controller = AdaptationController(engine)
     pipe = PipelinedEdgeCloudServer(engine, params, controller=controller,
                                     micro_batch=4)
