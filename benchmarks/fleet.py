@@ -34,6 +34,18 @@ regress):
    grid (N=50 points x 16 bit widths x 3 codecs, the ``ilp_solve_time``
    sizing); the small fleet-engine grid is reported alongside.
 
+3. **Fleet-wide re-planning scales sublinearly in D.** One fleet
+   re-decision round — ``FleetAdaptationController.current_plans``, i.e.
+   the fused ``FleetPlanSpace.decide_all`` argmin plus the vectorized
+   hysteresis commit — re-plans a 10^3 / 10^4 / 10^5-device fleet at the
+   paper-scale decision grid; round time must grow strictly sublinearly
+   in the device count (growing the fleet 100x must cost < 0.9 * 100x —
+   the round's fixed dispatch overhead amortizes as D grows) and the
+   per-device re-decision overhead at D = 10^5 must stay under a fixed
+   budget. A random sample of devices is pinned bitwise against the
+   per-device ``with_edge(p).decide(bw)`` oracle on every run (the full
+   randomized pin lives in tests/test_fleet_planner.py).
+
 Also reports the end-to-end fleet numbers (makespan vs the fully
 sequential sum of service times) for the N-device round-robin stream.
 """
@@ -51,7 +63,8 @@ from repro.core.decoupler import DecoupledPlan
 from repro.core.ilp import ILPProblem, solve_enumeration
 from repro.core.latency import LatencyModel
 from repro.data.synthetic import make_batch
-from repro.serving.fleet import FleetRequest, build_fleet_server
+from repro.serving.fleet import build_fleet_server
+from repro.serving.workloads import make_trace
 
 PROFILES = [
     EDGE_TX2,
@@ -61,6 +74,12 @@ PROFILES = [
 ]
 CLOUD_BATCH_MARGIN = 1.15      # batched cloud must be >= 15% faster
 REPLAN_SPEEDUP_MIN = 10.0      # planner re-solve vs ILPProblem rebuild
+FLEET_SIZES = (1_000, 10_000, 100_000)
+FLEET_SUBLINEAR_MARGIN = 0.9   # 100x devices must cost < 0.9 * 100x time
+FLEET_BUDGET_US = 2.0          # per-device re-decision budget at D = 1e5
+FLEET_ORACLE_SAMPLE = 16       # devices spot-checked against with_edge
+FLEET_DRIFT_ROUNDS = 6         # distinct bandwidth vectors cycled per size
+FLEET_TIMING_REPS = 20         # interleaved best-of reps per size
 REPEATS = 5
 
 
@@ -303,18 +322,102 @@ def run(quick: bool = True) -> Dict:
         f"rebuilding the ILPProblem at paper scale, got {speedup:.1f}x"
     )
 
-    # ----------------------------------------------- 3. end-to-end stream
-    bws_dev = [1e6, 300e3, 2e6, 600e3]
-    reqs, uid = [], 0
-    for j in range(n_per_device):
-        for d in range(len(PROFILES)):
-            reqs.append(FleetRequest(
-                uid=uid, device_id=d,
-                batch=make_batch(cfg, 4, 0, seed=400 + uid),
-                bandwidth=bws_dev[d]))
-            uid += 1
+    # ------------------------------------------------- 3. fleet scaling
+    from repro.config.types import DeviceProfile as _DP
+    from repro.core.adaptation import FleetAdaptationController
+    from repro.core.planner import FleetPlanSpace
+
+    space = _paper_scale_engine().plan_space
+    rng = np.random.default_rng(11)
+    # One fleet-wide re-decision = one controller round: the fused
+    # decide_all plus the vectorized hysteresis commit over (D,) state —
+    # exactly what the fleet server pays per wave. Timing rounds are
+    # interleaved across fleet sizes (best-of-N each) so a noisy-neighbor
+    # burst on a shared runner hits every size, not one of them.
+    fleets = {}
+    for n_dev in FLEET_SIZES:
+        flops = rng.uniform(2e11, 5e12, n_dev)
+        w = rng.uniform(0.8, 1.5, n_dev)
+        fleet_space = FleetPlanSpace.build(space, flops=flops, w=w)
+        drifts = [10 ** rng.uniform(4.5, 7.5, n_dev)
+                  for _ in range(FLEET_DRIFT_ROUNDS)]
+        ctrl = FleetAdaptationController(fleet_space)
+        ctrl.current_plans(drifts[0])              # warm buffers + commit
+        fleets[n_dev] = (fleet_space, ctrl, drifts, flops, w)
+    times_s = {n: np.inf for n in FLEET_SIZES}
+    t_decide = {n: np.inf for n in FLEET_SIZES}
+    for rep in range(FLEET_TIMING_REPS):
+        for n_dev, (fleet_space, ctrl, drifts, _, _) in fleets.items():
+            bws_fleet = drifts[rep % len(drifts)]
+            t0 = time.perf_counter()
+            ctrl.current_plans(bws_fleet)
+            times_s[n_dev] = min(times_s[n_dev], time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            fleet_space.decide_all(bws_fleet)
+            t_decide[n_dev] = min(t_decide[n_dev],
+                                  time.perf_counter() - t0)
+    scaling_rows = []
+    for n_dev in FLEET_SIZES:
+        scaling_rows.append([
+            f"{n_dev:,}", f"{t_decide[n_dev] * 1e3:.2f}ms",
+            f"{times_s[n_dev] * 1e3:.2f}ms",
+            f"{times_s[n_dev] / n_dev * 1e6:.3f}us"])
+        # spot-pin a random device sample against the scalar oracle
+        fleet_space, _, drifts, flops, w = fleets[n_dev]
+        decision = fleet_space.decide_all(drifts[0])
+        for d in rng.choice(n_dev, size=FLEET_ORACLE_SAMPLE, replace=False):
+            view = space.with_edge(
+                _DP(f"bench-{d}", float(flops[d]), float(w[d])))
+            ref = view.decide(float(drifts[0][d]))
+            got = decision.plan(int(d))
+            assert (got.point, got.bits, got.codec) == \
+                (ref.point, ref.bits, ref.codec), (n_dev, d)
+            assert got.predicted_latency == ref.predicted_latency, (n_dev, d)
+    d_lo, d_hi = FLEET_SIZES[0], FLEET_SIZES[-1]
+    growth = times_s[d_hi] / times_s[d_lo]
+    allowed = FLEET_SUBLINEAR_MARGIN * (d_hi / d_lo)
+    per_device_us = times_s[d_hi] / d_hi * 1e6
+    results["fleet_scaling"] = {
+        "grid": f"{space.edge_vec.shape[0]}x{space.n_choices}",
+        "decide_all_ms": {str(n): t_decide[n] * 1e3 for n in FLEET_SIZES},
+        "replan_round_ms": {str(n): times_s[n] * 1e3
+                            for n in FLEET_SIZES},
+        "growth_x": growth,
+        "allowed_growth_x": allowed,
+        "per_device_us_at_max": per_device_us,
+        "oracle_sample_per_size": FLEET_ORACLE_SAMPLE,
+    }
+    print(f"\nFleet-wide re-plan (one adaptation round, paper-scale grid "
+          f"{results['fleet_scaling']['grid']})")
+    print(fmt_table(scaling_rows, ["devices", "decide_all",
+                                   "replan round", "per device"]))
+    print(f"{d_lo:,} -> {d_hi:,} devices: {growth:.1f}x time for "
+          f"{d_hi // d_lo}x devices (sublinear bound {allowed:.0f}x), "
+          f"{per_device_us:.3f}us/device at D={d_hi:,}")
+    assert growth < allowed, (
+        f"fleet re-decision time must grow sublinearly in D: "
+        f"{d_hi // d_lo}x devices took {growth:.1f}x time "
+        f"(bound {allowed:.0f}x)"
+    )
+    assert per_device_us <= FLEET_BUDGET_US, (
+        f"per-device decision overhead at D={d_hi:,} must stay within "
+        f"{FLEET_BUDGET_US}us, got {per_device_us:.3f}us"
+    )
+
+    # ----------------------------------------------- 4. end-to-end stream
+    # Trace-shaped traffic instead of a hand-built round-robin list: a
+    # steady-load trace with per-device bandwidth walks. dt_s is kept far
+    # below the per-request service time so the arrival spread does not
+    # dominate the makespan-vs-sequential comparison.
+    trace = make_trace(len(PROFILES), n_steps=2 * n_per_device + 2,
+                       seed=23, kind="steady", dt_s=1e-3, base_rate=0.85,
+                       mean_bps=1e6, spread=2.0)
+    reqs = trace.requests(lambda uid, d: make_batch(cfg, 4, 0,
+                                                    seed=400 + uid))
     done = fleet.serve(reqs)
     results["stream"] = {
+        "trace": {"kind": "steady", "seed": trace.seed,
+                  "n_steps": trace.n_steps},
         "requests": len(done),
         "makespan_s": fleet.makespan_s,
         "sequential_s": fleet.synchronous_time_s(),

@@ -16,12 +16,22 @@ from repro.serving.fleet import (
     FleetServer,
     build_fleet_server,
 )
+from repro.serving.workloads import (
+    FleetTrace,
+    bandwidth_walks,
+    diurnal_rates,
+    make_trace,
+)
 
 __all__ = [
     "FleetDevice",
     "FleetRequest",
     "FleetServer",
+    "FleetTrace",
+    "bandwidth_walks",
     "build_fleet_server",
+    "diurnal_rates",
+    "make_trace",
     "ServeSession",
     "Request",
     "RequestScheduler",

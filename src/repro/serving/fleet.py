@@ -1,64 +1,115 @@
-"""Fleet-scale edge-cloud serving: N heterogeneous edges, one shared cloud.
+"""Fleet-scale edge-cloud serving: D heterogeneous edges, one shared cloud.
 
 The paper's end state (Sec. III-E, Fig. 8) is a cloud that serves *many*
 edge devices, each adapting its decoupling to its own link and its own
-compute. :class:`FleetServer` models exactly that:
+compute. :class:`FleetServer` models exactly that, with the whole fleet's
+decision plane held in stacked arrays:
 
-* **Per-device decision plane.** Every device gets its own
-  :class:`DeviceProfile`, its own bandwidth (per request, so traces are
-  per-device), and its own :class:`AdaptationController` — but all devices
-  share ONE :class:`~repro.core.planner.PlanSpace` precomputation: the
-  size/accuracy tables and the cloud-time vector are device-independent,
-  so each device's engine is a ``PlanSpace.with_edge`` view that only
-  recomputes the edge-time vector (``JaladEngine.for_edge``).
+* **Vectorized decision plane.** Per-device state — bandwidth estimates,
+  current plan cells, hysteresis step counters, FIFO edge/link clocks —
+  lives in ``(D,)`` arrays. One :class:`~repro.core.planner.FleetPlanSpace`
+  stacks every device's ``with_edge`` view over ONE shared
+  :class:`~repro.core.planner.PlanSpace`, and a fleet-wide re-plan is a
+  single fused ``decide_all`` argmin over the ``(D, N·C·K)`` grid driven
+  by the vectorized
+  :class:`~repro.core.adaptation.FleetAdaptationController` — no
+  per-device Python in the decision path. Requests are served in *waves*
+  (the k-th request of each device), so the per-device
+  decision/observation sequence is exactly the synchronous
+  ``EdgeCloudServer.serve_batch`` sequence and results stay byte-identical
+  to serving each device alone.
+
+* **Object view kept.** ``fleet.devices[d]`` is a thin view over the
+  arrays (profile, lazy ``for_edge`` engine, clock, log) so the
+  synchronous-equivalence tests — and anything else written against the
+  per-device object API — keep working. ``vectorized=False`` runs the
+  original per-device controller loop, kept as the reference
+  implementation the array path is pinned against.
 
 * **Shared cloud worker with tail batching.** In-flight requests from
   *different* devices that agreed on the same (point, bits, codec) plan
   are grouped, and each group executes ONE batched wire decode
-  (:meth:`DecoupledRunner.cloud_step_batch`, mirroring PR 3's
-  ``edge_step_batch``). By default the tails then run through the same
-  per-request callable as the synchronous server, keeping per-request
-  logits **byte-identical** to serving each device through the
-  synchronous :class:`EdgeCloudServer`; ``fuse_cloud_tail=True`` opts
-  into ONE concatenated tail forward per group — the fastest path, but
-  float-level equivalent only (XLA re-blocks reductions per batch size,
-  so bitwise equality across batch shapes is impossible).
+  (:meth:`DecoupledRunner.cloud_step_batch`). By default the tails then
+  run through the per-request callable (byte-identical to the synchronous
+  server); ``fuse_cloud_tail=True`` opts into ONE concatenated tail
+  forward per group (fastest, float-level equivalent only).
 
-* **Reproducible accounting.** The simulated clock extends to a shared
-  cloud queue: per-device FIFO edge and link stages feed a single cloud
-  stage that serves requests in arrival order (ties broken by
-  (device, uid)), each occupying the cloud for its own modeled T_C. The
-  real batched execution never changes the reported numbers, so fleet
-  latency/throughput results are exactly reproducible on any host.
+* **Reproducible accounting.** Per-device FIFO edge and link stages feed
+  a single shared cloud stage that serves requests in arrival order (ties
+  broken by (device, uid)), each occupying the cloud for its own modeled
+  T_C. Real batching never changes the reported numbers.
+
+Trace-shaped request streams (diurnal load, bandwidth walks, flash
+crowds) for driving this server live in :mod:`repro.serving.workloads`.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.config.types import DeviceProfile, JaladConfig
-from repro.core.adaptation import AdaptationController
+from repro.core.adaptation import AdaptationController, FleetAdaptationController
 from repro.core.decoupler import DecoupledPlan, JaladEngine
 from repro.core.latency import PNG_RATIO
+from repro.core.planner import FleetPlanSpace
 from repro.serving.edge_cloud import LatencyBreakdown, RunnerCache
 from repro.serving.pipeline import StageTimeline
 
 PlanKey = Tuple[int, int, str]            # (point, bits, codec)
 
 
-@dataclass
 class FleetDevice:
-    """One edge device of the fleet: its own profile, engine view (shared
-    PlanSpace, device-specific edge vector) and adaptation controller."""
+    """Thin per-device view over the fleet's array-backed state: the
+    object API (profile, engine view, clock, log) without per-device
+    storage. ``engine`` materializes the ``for_edge`` PlanSpace view
+    lazily; ``controller`` is the per-device scalar controller in
+    ``vectorized=False`` mode and ``None`` in vectorized mode (the fleet
+    then has ONE :class:`FleetAdaptationController`)."""
 
-    device_id: int
-    profile: DeviceProfile
-    engine: JaladEngine
-    controller: AdaptationController
-    clock: float = 0.0                    # sum of service times (sync-equal)
-    log: List[LatencyBreakdown] = field(default_factory=list)
-    _edge_free: float = 0.0               # simulated busy_until
-    _link_free: float = 0.0
+    __slots__ = ("_fleet", "device_id", "profile", "_engine", "_controller")
+
+    def __init__(self, fleet: "FleetServer", device_id: int,
+                 profile: DeviceProfile):
+        self._fleet = fleet
+        self.device_id = device_id
+        self.profile = profile
+        self._engine: Optional[JaladEngine] = None
+        self._controller: Optional[AdaptationController] = None
+
+    @property
+    def engine(self) -> JaladEngine:
+        if self._engine is None:
+            self._engine = self._fleet.engine.for_edge(self.profile)
+        return self._engine
+
+    @property
+    def controller(self) -> Optional[AdaptationController]:
+        if self._fleet.vectorized:
+            return None
+        if self._controller is None:
+            self._controller = AdaptationController(self.engine)
+        return self._controller
+
+    @property
+    def clock(self) -> float:
+        return float(self._fleet._clock[self.device_id])
+
+    @property
+    def log(self) -> List[LatencyBreakdown]:
+        return self._fleet._logs[self.device_id]
+
+    @property
+    def plan(self) -> Optional[DecoupledPlan]:
+        """The device's active plan (post-hysteresis), either mode."""
+        if self._fleet.vectorized:
+            return self._fleet.controller.plan_for(self.device_id)
+        return self.controller.plan
+
+    def __repr__(self) -> str:      # pragma: no cover - debug aid
+        return (f"FleetDevice({self.device_id}, {self.profile.name}, "
+                f"clock={self.clock:.4g})")
 
 
 @dataclass
@@ -87,12 +138,12 @@ class CloudGroup:
 
 @dataclass
 class FleetServer:
-    """Serve N heterogeneous edge devices against one shared cloud.
+    """Serve D heterogeneous edge devices against one shared cloud.
 
-    ``engine`` is the template (tables + cloud profile + config); each
-    entry of ``edge_profiles`` becomes a device whose engine shares the
-    template's PlanSpace via ``with_edge``. Runners are shared across
-    devices — a (point, bits, codec) plan compiles once for the fleet.
+    ``engine`` is the template (tables + cloud profile + config); the
+    ``edge_profiles`` stack into one :class:`FleetPlanSpace` sharing the
+    template's PlanSpace. Runners are shared across devices — a
+    (point, bits, codec) plan compiles once for the fleet.
     """
 
     engine: JaladEngine
@@ -105,37 +156,134 @@ class FleetServer:
     # fuse each group into ONE concatenated tail forward (fastest;
     # float-level equivalent only — see cloud_step_batch).
     fuse_cloud_tail: bool = False
+    # True (default): array-backed decision plane — one fused decide_all
+    # per serving wave. False: the per-device AdaptationController loop,
+    # kept as the reference path the vectorized one is pinned against.
+    vectorized: bool = True
     runners: Optional[RunnerCache] = None
     devices: List[FleetDevice] = field(default_factory=list)
     completed: List[FleetRequest] = field(default_factory=list)
     cloud_groups: List[CloudGroup] = field(default_factory=list)
+    fleet_space: Optional[FleetPlanSpace] = None
+    controller: Optional[FleetAdaptationController] = None
     _cloud_free: float = 0.0
+    # (D,) simulated FIFO clocks + per-device accounting
+    _edge_free: np.ndarray = field(default=None, repr=False)
+    _link_free: np.ndarray = field(default=None, repr=False)
+    _clock: np.ndarray = field(default=None, repr=False)
+    _logs: List[List[LatencyBreakdown]] = field(default_factory=list,
+                                                repr=False)
 
     def __post_init__(self):
         if not self.edge_profiles:
             raise ValueError("FleetServer needs at least one edge profile")
         if self.runners is None:
             self.runners = RunnerCache(self.engine, self.params)
+        d = len(self.edge_profiles)
+        if self.fleet_space is None:
+            self.fleet_space = FleetPlanSpace.build(
+                self.engine.plan_space, self.edge_profiles)
+        if self.controller is None:
+            self.controller = FleetAdaptationController(
+                self.fleet_space,
+                default_bw=self.engine.cfg.bandwidth_bytes_per_s)
+        self._edge_free = np.zeros(d)
+        self._link_free = np.zeros(d)
+        self._clock = np.zeros(d)
+        self._logs = [[] for _ in range(d)]
         if not self.devices:
-            for d, prof in enumerate(self.edge_profiles):
-                eng = self.engine.for_edge(prof)
-                self.devices.append(FleetDevice(
-                    device_id=d, profile=prof, engine=eng,
-                    controller=AdaptationController(eng),
-                ))
+            self.devices = [FleetDevice(self, i, prof)
+                            for i, prof in enumerate(self.edge_profiles)]
 
     @property
     def n_devices(self) -> int:
         return len(self.devices)
 
     # -------------------------------------------------------------- stages
-    def _edge_and_link_phase(self, reqs: List[FleetRequest]) -> None:
-        """Per-device FIFO edge compute + encode + link transfer. The
-        decision/observation sequence per device is exactly the synchronous
-        ``EdgeCloudServer.serve_batch`` sequence, so per-device plans (and
-        therefore results) match serving each device alone."""
+    def _waves(self, reqs: List[FleetRequest]) -> List[List[FleetRequest]]:
+        """Wave k holds the k-th request of every device, in stream
+        order. Decisions and clocks only couple *within* a device, so
+        advancing one wave at a time with a fleet-wide fused decide is
+        equivalent to the per-request loop — and each wave touches any
+        device at most once, making the array scatter updates safe."""
+        seq: Dict[int, int] = {}
+        waves: List[List[FleetRequest]] = []
         for r in reqs:
-            dev = self.devices[r.device_id]
+            k = seq.get(r.device_id, 0)
+            seq[r.device_id] = k + 1
+            if k == len(waves):
+                waves.append([])
+            waves[k].append(r)
+        return waves
+
+    def _edge_and_link_phase(self, reqs: List[FleetRequest]) -> None:
+        """Per-device FIFO edge compute + encode + link transfer, decided
+        wave-by-wave through the vectorized controller. The per-device
+        decision/observation sequence is exactly the synchronous
+        ``EdgeCloudServer.serve_batch`` sequence, so per-device plans
+        (and therefore results) match serving each device alone."""
+        for wave in self._waves(reqs):
+            m = len(wave)
+            dv = np.fromiter((r.device_id for r in wave), np.int64, m)
+            bws = np.fromiter((r.bandwidth for r in wave), np.float64, m)
+            # ONE fused fleet re-decision for the whole wave.
+            plan_j, _ = self.controller.current_plans(bws, dv)
+            # Real numerics: per-request edge halves (heterogeneous plans
+            # cannot batch across devices; PR 3's micro-batching still
+            # applies inside each request's own batch).
+            nbytes = np.empty(m)
+            for i, r in enumerate(wave):
+                plan = self.controller.plan_for(r.device_id)
+                r.plan = plan
+                if plan.is_cloud_only:
+                    nb = int(self.fleet_space.space.input_bytes * PNG_RATIO)
+                else:
+                    runner = self.runners.get(plan)
+                    r._blob, r._extras = runner.edge_step(r.batch)
+                    nb = r._blob.nbytes
+                nbytes[i] = nb
+            # Array-backed simulated clocks: vectorized FIFO bookkeeping
+            # over the wave (each device appears at most once per wave).
+            edge_t, cloud_t = self.fleet_space.stage_times_all(plan_j, dv)
+            transfer_t = nbytes / bws
+            arrival = np.fromiter((r.arrival_s for r in wave),
+                                  np.float64, m)
+            edge_start = np.maximum(arrival, self._edge_free[dv])
+            edge_end = edge_start + edge_t
+            self._edge_free[dv] = edge_end
+            xfer_start = np.maximum(edge_end, self._link_free[dv])
+            xfer_end = xfer_start + transfer_t
+            self._link_free[dv] = xfer_end
+            self.controller.observe_transfers(
+                np.maximum(nbytes, 1), np.maximum(transfer_t, 1e-9), dv)
+            for i, r in enumerate(wave):
+                plan = r.plan
+                tl = r.timeline
+                tl.arrival_s = r.arrival_s
+                tl.edge_start = float(edge_start[i])
+                tl.edge_end = float(edge_end[i])
+                tl.xfer_start = float(xfer_start[i])
+                tl.xfer_end = float(xfer_end[i])
+                tl.bytes_sent = int(nbytes[i])
+                tl.plan_point = plan.point
+                tl.plan_bits = plan.bits
+                tl.plan_codec = (plan.codec if not plan.is_cloud_only
+                                 else "png")
+                r.breakdown = LatencyBreakdown(
+                    float(edge_t[i]), float(transfer_t[i]),
+                    float(cloud_t[i]), int(nbytes[i]),
+                    plan.point if not plan.is_cloud_only else -1,
+                    plan.bits if not plan.is_cloud_only else 0,
+                    plan.codec if not plan.is_cloud_only else "png",
+                )
+
+    def _edge_and_link_phase_scalar(self, reqs: List[FleetRequest]) -> None:
+        """Reference path (``vectorized=False``): the original per-device
+        AdaptationController loop. The vectorized phase is pinned
+        byte-identical to this in ``tests/test_fleet.py``."""
+        for r in reqs:
+            d = r.device_id
+            dev = self.devices[d]
             plan = dev.controller.current_plan(r.bandwidth)
             r.plan = plan
             space = dev.engine.plan_space
@@ -149,12 +297,12 @@ class FleetServer:
             transfer_t = nbytes / r.bandwidth
             tl = r.timeline
             tl.arrival_s = r.arrival_s
-            tl.edge_start = max(r.arrival_s, dev._edge_free)
+            tl.edge_start = max(r.arrival_s, float(self._edge_free[d]))
             tl.edge_end = tl.edge_start + edge_t
-            dev._edge_free = tl.edge_end
-            tl.xfer_start = max(tl.edge_end, dev._link_free)
+            self._edge_free[d] = tl.edge_end
+            tl.xfer_start = max(tl.edge_end, float(self._link_free[d]))
             tl.xfer_end = tl.xfer_start + transfer_t
-            dev._link_free = tl.xfer_end
+            self._link_free[d] = tl.xfer_end
             tl.bytes_sent = nbytes
             tl.plan_point = plan.point
             tl.plan_bits = plan.bits
@@ -226,14 +374,16 @@ class FleetServer:
             if not 0 <= r.device_id < self.n_devices:
                 raise ValueError(
                     f"request {r.uid} names unknown device {r.device_id}")
-        self._edge_and_link_phase(reqs)
+        if self.vectorized:
+            self._edge_and_link_phase(reqs)
+        else:
+            self._edge_and_link_phase_scalar(reqs)
         done = self._cloud_phase(reqs)
         # Per-device bookkeeping in submission order — mirrors the
         # synchronous server's clock/log exactly.
         for r in reqs:
-            dev = self.devices[r.device_id]
-            dev.clock += r.breakdown.total_s
-            dev.log.append(r.breakdown)
+            self._clock[r.device_id] += r.breakdown.total_s
+            self._logs[r.device_id].append(r.breakdown)
             r._blob = r._extras = None
         self.completed.extend(done)
         return done
@@ -270,9 +420,10 @@ def build_fleet_server(
     params: Any = None,
     points: Optional[List[int]] = None,
     cloud_batch: int = 8,
+    vectorized: bool = True,
 ) -> Tuple[FleetServer, Any]:
     """End-to-end factory: one calibration (tables are device-independent),
-    one PlanSpace, N per-device engine views."""
+    one PlanSpace, one stacked FleetPlanSpace over the device profiles."""
     from repro.serving.edge_cloud import build_edge_cloud_server
 
     srv, params = build_edge_cloud_server(
@@ -281,5 +432,5 @@ def build_fleet_server(
         points=points,
     )
     fleet = FleetServer(srv.engine, params, list(edge_profiles),
-                        cloud_batch=cloud_batch)
+                        cloud_batch=cloud_batch, vectorized=vectorized)
     return fleet, params

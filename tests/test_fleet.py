@@ -1,7 +1,12 @@
 """Fleet-scale serving: N heterogeneous devices against one shared cloud
 must be byte-identical, request for request, to serving each device through
 its own synchronous EdgeCloudServer — while the shared cloud actually
-batches same-plan tails and the simulated clock stays FIFO-consistent."""
+batches same-plan tails and the simulated clock stays FIFO-consistent.
+The array-backed (vectorized) decision plane is additionally pinned
+byte-identical to the preserved per-device scalar loop, including the
+degenerate fleets: empty streams, one device, all-cloud-only plans."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -206,3 +211,101 @@ def test_fleet_makespan_reflects_sharing(served_fleet):
     fleet, done, _ = served_fleet
     assert fleet.makespan_s > 0
     assert fleet.makespan_s < fleet.synchronous_time_s()
+
+
+def test_vectorized_matches_scalar_reference_path(fleet_setup):
+    """The array-backed decision/clock plane (one current_plans call per
+    wave, (D,) FIFO clocks) is byte-identical — logits, breakdowns,
+    timelines, per-device clocks and logs — to the preserved per-device
+    AdaptationController loop on the 4-heterogeneous-device fleet."""
+    engine, params, cfg = fleet_setup
+    batches = _batches(cfg)
+    vec = FleetServer(engine, params, PROFILES)
+    sca = FleetServer(engine, params, PROFILES, vectorized=False)
+    assert vec.vectorized and not sca.vectorized
+    done_v = {r.uid: r for r in vec.serve(_requests(batches))}
+    done_s = {r.uid: r for r in sca.serve(_requests(batches))}
+    assert done_v.keys() == done_s.keys()
+    for uid, rv in done_v.items():
+        rs = done_s[uid]
+        assert rv.breakdown == rs.breakdown
+        assert rv.timeline == rs.timeline
+        np.testing.assert_array_equal(np.asarray(rv.logits),
+                                      np.asarray(rs.logits))
+    for d in range(len(PROFILES)):
+        assert vec.devices[d].clock == sca.devices[d].clock
+        assert vec.devices[d].log == sca.devices[d].log
+    assert vec.makespan_s == sca.makespan_s
+    assert vec.batched_launches() == sca.batched_launches()
+
+
+def test_empty_request_stream(fleet_setup):
+    """Degenerate log accounting: an empty stream completes and every
+    aggregate stays at its zero value."""
+    engine, params, _ = fleet_setup
+    for vectorized in (True, False):
+        fleet = FleetServer(engine, params, PROFILES,
+                            vectorized=vectorized)
+        assert fleet.serve([]) == []
+        assert fleet.makespan_s == 0.0
+        assert fleet.synchronous_time_s() == 0.0
+        assert fleet.batched_launches() == 0
+        assert fleet.cloud_groups == []
+        assert all(dev.clock == 0.0 and dev.log == []
+                   for dev in fleet.devices)
+
+
+def test_single_device_fleet_matches_synchronous_server(fleet_setup):
+    """A 1-device fleet is exactly one synchronous EdgeCloudServer."""
+    engine, params, cfg = fleet_setup
+    fleet = FleetServer(engine, params, PROFILES[:1])
+    batches = [make_batch(cfg, 4, 0, seed=500 + j) for j in range(3)]
+    done = fleet.serve([
+        FleetRequest(uid=j, device_id=0, batch=dict(batches[j]),
+                     bandwidth=BWS[0])
+        for j in range(len(batches))
+    ])
+    ref = EdgeCloudServer(fleet.devices[0].engine, params)
+    for j, r in enumerate(sorted(done, key=lambda r: r.uid)):
+        logits, bd = ref.serve_batch(dict(batches[j]), bandwidth=BWS[0])
+        assert r.breakdown == bd
+        np.testing.assert_array_equal(np.asarray(r.logits),
+                                      np.asarray(logits))
+    assert fleet.devices[0].clock == pytest.approx(ref.clock)
+    assert fleet.devices[0].log == ref.log
+    assert fleet.makespan_s > 0
+
+
+def test_all_cloud_only_fleet(fleet_setup):
+    """An unsatisfiable accuracy budget forces x_NC = 1 everywhere: every
+    request full-forwards on the cloud, the degenerate log reports no
+    batched tail launches, and both decision planes agree."""
+    engine, params, cfg = fleet_setup
+    strict = dataclasses.replace(
+        engine,
+        cfg=dataclasses.replace(engine.cfg, accuracy_drop_budget=-1.0),
+        _plan_space=None,
+    )
+    batches = _batches(cfg)
+    fleet = FleetServer(strict, params, PROFILES)
+    done = fleet.serve(_requests(batches))
+    assert len(done) == len(PROFILES) * REQS_PER_DEVICE
+    full = fleet.runners.full_forward()
+    by_uid = {r.uid: r for r in done}
+    for j in range(REQS_PER_DEVICE):
+        for d in range(len(PROFILES)):
+            r = by_uid[j * len(PROFILES) + d]
+            assert r.breakdown.plan_point == -1
+            assert r.breakdown.plan_bits == 0
+            assert r.breakdown.plan_codec == "png"
+            assert r.breakdown.edge_s == 0.0
+            np.testing.assert_array_equal(
+                np.asarray(r.logits),
+                np.asarray(full(params, dict(batches[d][j]))))
+    assert fleet.batched_launches() == 0          # nothing to tail-batch
+    assert all(g.key is None for g in fleet.cloud_groups)
+    assert fleet.makespan_s > 0
+    scalar = FleetServer(strict, params, PROFILES, vectorized=False)
+    done_s = {r.uid: r for r in scalar.serve(_requests(batches))}
+    for uid, r in by_uid.items():
+        assert done_s[uid].breakdown == r.breakdown

@@ -1,0 +1,335 @@
+"""The vectorized fleet decision plane pinned to its scalar oracles:
+``FleetPlanSpace.decide_all`` must agree bitwise with D independent
+``PlanSpace.with_edge(p).decide(bw)`` calls (including infeasible-budget
+and cloud-only-fallback devices), and ``FleetAdaptationController`` must
+produce the identical plan/switch sequence — event for event — as D
+independent scalar ``AdaptationController``s over randomized bandwidth
+walks with jitter, step changes, and flash-crowd drops."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.types import CLOUD_1080TI, EDGE_TX2, DeviceProfile
+from repro.core.adaptation import (
+    CLOUD_ONLY,
+    NO_PLAN,
+    AdaptationController,
+    FleetAdaptationController,
+)
+from repro.core.latency import LatencyModel
+from repro.core.planner import FleetPlanSpace, PlanSpace
+from repro.core.predictor import PredictorTables
+
+
+def random_space(seed, n=None, c=None, k=None, budget=None):
+    rng = np.random.default_rng(seed)
+    n = n or int(rng.integers(1, 12))
+    c = c or int(rng.integers(1, 5))
+    k = k or int(rng.integers(1, 4))
+    fmacs = rng.random(n) * 1e9 + 1e8
+    lat = LatencyModel(fmacs, EDGE_TX2, CLOUD_1080TI, input_bytes=150_528.0)
+    tables = PredictorTables(
+        points=[f"p{i}" for i in range(n)],
+        bits_choices=[2 + i for i in range(c)],
+        codecs=[f"codec{i}" for i in range(k)],
+        acc_drop=rng.random((n, c, k)) * 0.3,
+        size_bytes=rng.random((n, c, k)) * 1e6 + 1e3,
+        base_accuracy=0.9,
+    )
+    budget = budget if budget is not None else float(rng.random() * 0.3)
+    return PlanSpace.build(tables, lat, budget)
+
+
+def random_profiles(seed, d):
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    return [
+        DeviceProfile(f"dev-{i}", float(rng.uniform(1e11, 8e12)),
+                      float(rng.uniform(0.7, 1.6)))
+        for i in range(d)
+    ]
+
+
+def random_bandwidths(seed, d):
+    # spans starved links to fiber so both mid-grid and extreme argmins
+    # (and the cloud-only transfer term) get exercised
+    rng = np.random.default_rng(seed ^ 0xBA0D)
+    return 10 ** rng.uniform(3.0, 8.5, d)
+
+
+def assert_plans_equal(got, ref, ctx=""):
+    assert (got.point, got.bits, got.codec) == \
+        (ref.point, ref.bits, ref.codec), ctx
+    assert got.predicted_latency == ref.predicted_latency, ctx
+    assert got.predicted_acc_drop == ref.predicted_acc_drop, ctx
+
+
+class _EngineView:
+    """Minimal scalar-engine facade over one device's PlanSpace view —
+    just what AdaptationController touches (decide / plan_space / cfg)."""
+
+    class _Cfg:
+        bandwidth_bytes_per_s = 1e6
+
+    cfg = _Cfg()
+
+    def __init__(self, space):
+        self.plan_space = space
+
+    def decide(self, bandwidth, method="vectorized"):
+        return self.plan_space.decide(bandwidth)
+
+
+# ---------------------------------------------------------------------------
+# decide_all vs the with_edge scalar oracle
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_decide_all_matches_with_edge_oracle(seed):
+    """One batched (D, N*C*K) argmin == D independent scalar decides:
+    same plan cells, bitwise-identical predicted latency and acc drop."""
+    space = random_space(seed)
+    rng = np.random.default_rng(seed ^ 0xD)
+    d = int(rng.integers(1, 40))
+    profiles = random_profiles(seed, d)
+    fleet = FleetPlanSpace.build(space, profiles)
+    bws = random_bandwidths(seed, d)
+    decision = fleet.decide_all(bws)
+    assert len(decision) == d
+    for i, plan in enumerate(decision.plans()):
+        ref = space.with_edge(profiles[i]).decide(float(bws[i]))
+        assert_plans_equal(plan, ref, ctx=f"device {i}")
+        assert decision.cost[i] == ref.predicted_latency
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_decide_all_infeasible_budget_is_cloud_only(seed):
+    """With an unsatisfiable accuracy budget every device falls back to
+    cloud-only (x_NC = 1), at exactly the scalar cloud_only_time."""
+    space = random_space(seed, budget=-1.0)
+    d = int(np.random.default_rng(seed).integers(1, 20))
+    profiles = random_profiles(seed, d)
+    fleet = FleetPlanSpace.build(space, profiles)
+    bws = random_bandwidths(seed, d)
+    decision = fleet.decide_all(bws)
+    assert np.all(decision.flat_j == CLOUD_ONLY)
+    for i, plan in enumerate(decision.plans()):
+        ref = space.with_edge(profiles[i]).decide(float(bws[i]))
+        assert plan.is_cloud_only and ref.is_cloud_only
+        assert plan.predicted_latency == ref.predicted_latency
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_decide_all_device_subset(seed):
+    """decide_all over an explicit device subset matches both the full
+    fleet decision restricted to the subset and the scalar oracle."""
+    space = random_space(seed)
+    rng = np.random.default_rng(seed ^ 0x5B)
+    d = int(rng.integers(2, 30))
+    profiles = random_profiles(seed, d)
+    fleet = FleetPlanSpace.build(space, profiles)
+    bws = random_bandwidths(seed, d)
+    sub = np.sort(rng.choice(d, size=int(rng.integers(1, d + 1)),
+                             replace=False))
+    decision = fleet.decide_all(bws[sub], devices=sub)
+    full = fleet.decide_all(bws)
+    assert np.array_equal(decision.flat_j, full.flat_j[sub])
+    assert np.array_equal(decision.cost, full.cost[sub])
+    for i, dev in enumerate(sub):
+        ref = space.with_edge(profiles[dev]).decide(float(bws[dev]))
+        assert_plans_equal(decision.plan(i), ref, ctx=f"subset dev {dev}")
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_stage_times_and_plan_cost_match_scalar(seed):
+    """The vectorized per-plan accessors (stage_times_all /
+    plan_cost_all) agree bitwise with the scalar stage_times/plan_cost
+    on every device's decided plan — including cloud-only rows."""
+    space = random_space(seed)
+    rng = np.random.default_rng(seed ^ 0x57)
+    d = int(rng.integers(1, 25))
+    profiles = random_profiles(seed, d)
+    fleet = FleetPlanSpace.build(space, profiles)
+    bws = random_bandwidths(seed, d)
+    decision = fleet.decide_all(bws)
+    edge_t, cloud_t = fleet.stage_times_all(decision.flat_j)
+    cost = fleet.plan_cost_all(decision.flat_j, bws)
+    for i, plan in enumerate(decision.plans()):
+        view = space.with_edge(profiles[i])
+        ref_e, ref_c = view.stage_times(plan)
+        assert edge_t[i] == ref_e and cloud_t[i] == ref_c, f"device {i}"
+        assert cost[i] == view.plan_cost(plan, float(bws[i])), f"device {i}"
+
+
+def test_build_from_raw_arrays_matches_profiles():
+    """Building from raw (flops, w) arrays — the 1e5-fleet path that
+    skips DeviceProfile objects — yields the same decisions."""
+    space = random_space(123)
+    profiles = random_profiles(123, 9)
+    flops = np.array([p.flops for p in profiles])
+    w = np.array([p.w for p in profiles])
+    bws = random_bandwidths(123, 9)
+    a = FleetPlanSpace.build(space, profiles).decide_all(bws)
+    b = FleetPlanSpace.build(space, flops=flops, w=w).decide_all(bws)
+    assert np.array_equal(a.flat_j, b.flat_j)
+    assert np.array_equal(a.cost, b.cost)
+
+
+def test_build_and_decide_validation():
+    space = random_space(7)
+    profiles = random_profiles(7, 4)
+    with pytest.raises(ValueError):
+        FleetPlanSpace.build(space, profiles, flops=np.ones(4))
+    with pytest.raises(ValueError):
+        FleetPlanSpace.build(space, flops=np.ones(4), w=np.ones(3))
+    with pytest.raises(ValueError):
+        FleetPlanSpace.build(space, flops=np.zeros(4), w=np.ones(4))
+    fleet = FleetPlanSpace.build(space, profiles)
+    with pytest.raises(ValueError):
+        fleet.decide_all(np.ones(3))          # 3 bandwidths, 4 devices
+
+
+def test_device_view_shares_tables():
+    """device_view(d) is a with_edge view: shared cost tables, only the
+    edge vector recomputed — same identity contract as with_edge."""
+    space = random_space(11)
+    profiles = random_profiles(11, 3)
+    fleet = FleetPlanSpace.build(space, profiles)
+    view = fleet.device_view(1)
+    assert view.size_flat is space.size_flat
+    assert view.acc_flat is space.acc_flat
+    assert np.array_equal(fleet.edge_mat[1], np.asarray(view.edge_vec))
+
+
+# ---------------------------------------------------------------------------
+# FleetAdaptationController vs D scalar AdaptationControllers
+# ---------------------------------------------------------------------------
+
+def scalar_controllers(space, profiles, switch_margin=0.05):
+    return [
+        AdaptationController(engine=_EngineView(space.with_edge(p)),
+                             switch_margin=switch_margin)
+        for p in profiles
+    ]
+
+
+def assert_history_pinned(fleet_ctrl, refs):
+    """Event-for-event: same steps, bandwidths, plan keys and predicted
+    values. solve_ms is wall-clock and excluded by design."""
+    for dd, ref in enumerate(refs):
+        got = fleet_ctrl.history_for(dd)
+        assert len(got) == len(ref.history), f"device {dd}"
+        for ge, re_ in zip(got, ref.history):
+            assert ge.step == re_.step
+            assert ge.bandwidth == re_.bandwidth
+            assert (ge.old_plan is None) == (re_.old_plan is None)
+            if ge.old_plan is not None:
+                assert_plans_equal(ge.old_plan, re_.old_plan)
+            assert_plans_equal(ge.new_plan, re_.new_plan)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_fleet_controller_pins_scalar_walk(seed):
+    """Randomized bandwidth walks (log-space jitter + a mid-walk step
+    change + a flash-crowd drop window), every round advancing a random
+    device subset: the vectorized controller's plan sequence, switch
+    events, and EWMA estimates match D scalar controllers exactly."""
+    space = random_space(seed, n=int(np.random.default_rng(seed)
+                                     .integers(2, 10)))
+    rng = np.random.default_rng(seed ^ 0xA11)
+    d = int(rng.integers(1, 12))
+    profiles = random_profiles(seed, d)
+    fleet = FleetPlanSpace.build(space, profiles)
+    ctrl = FleetAdaptationController(fleet, default_bw=1e6)
+    refs = scalar_controllers(space, profiles)
+
+    logbw = rng.uniform(4.0, 7.0, d)
+    rounds = int(rng.integers(5, 30))
+    drop = (rounds // 3, rounds // 3 + max(1, rounds // 5))
+    for t in range(rounds):
+        logbw += rng.normal(0.0, 0.3, d)          # jitter walk
+        if t == rounds // 2:
+            logbw += rng.choice([-1.0, 1.0]) * 1.0   # step change
+        bws = 10 ** np.clip(logbw, 3.0, 8.5)
+        if drop[0] <= t < drop[1]:
+            bws = bws / 10.0                      # flash-crowd drop
+        if rng.random() < 0.5:
+            sel = np.arange(d)
+            plan_j, lat = ctrl.current_plans(bws)
+        else:
+            sel = np.sort(rng.choice(d, size=int(rng.integers(1, d + 1)),
+                                     replace=False))
+            plan_j, lat = ctrl.current_plans(bws[sel], devices=sel)
+        for i, dev in enumerate(sel):
+            ref_plan = refs[dev].current_plan(float(bws[dev]))
+            assert_plans_equal(ctrl.plan_for(int(dev)), ref_plan,
+                               ctx=f"round {t} device {dev}")
+            assert lat[i] == ref_plan.predicted_latency
+    assert_history_pinned(ctrl, refs)
+    assert ctrl.switch_count() == sum(
+        sum(1 for e in ref.history if e.old_plan is not None)
+        for ref in refs)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_fleet_controller_ewma_matches_scalar(seed):
+    """observe_transfers + estimate-driven current_plans (no explicit
+    bandwidth) reproduce the scalar EWMA estimator bitwise, including
+    the invalid-sample (nbytes/seconds <= 0) guard."""
+    space = random_space(seed, n=6)
+    rng = np.random.default_rng(seed ^ 0xE3)
+    d = int(rng.integers(1, 10))
+    profiles = random_profiles(seed, d)
+    fleet = FleetPlanSpace.build(space, profiles)
+    ctrl = FleetAdaptationController(fleet, default_bw=1e6)
+    refs = scalar_controllers(space, profiles)
+    for _ in range(int(rng.integers(3, 15))):
+        nbytes = rng.uniform(-1e4, 1e6, d)        # some invalid (<= 0)
+        secs = rng.uniform(-0.01, 0.5, d)
+        ctrl.observe_transfers(nbytes, secs)
+        for dd in range(d):
+            refs[dd].observe_transfer(float(nbytes[dd]), float(secs[dd]))
+        ctrl.current_plans()                      # EWMA (or default) bw
+        for dd in range(d):
+            ref_plan = refs[dd].current_plan()
+            assert_plans_equal(ctrl.plan_for(dd), ref_plan)
+            ref_bw = refs[dd].bw
+            got = ctrl.bw_est[dd]
+            assert (np.isnan(got) and ref_bw is None) or got == ref_bw
+    assert_history_pinned(ctrl, refs)
+
+
+def test_fleet_controller_cloud_only_fleet():
+    """An unsatisfiable budget drives every device to the cloud-only
+    plan; the sentinel column and materialized plans match the scalar
+    controller's cloud-only events."""
+    space = random_space(42, budget=-1.0)
+    profiles = random_profiles(42, 5)
+    fleet = FleetPlanSpace.build(space, profiles)
+    ctrl = FleetAdaptationController(fleet, default_bw=1e6)
+    refs = scalar_controllers(space, profiles)
+    bws = random_bandwidths(42, 5)
+    ctrl.current_plans(bws)
+    for dd in range(5):
+        ref_plan = refs[dd].current_plan(float(bws[dd]))
+        got = ctrl.plan_for(dd)
+        assert got.is_cloud_only and ref_plan.is_cloud_only
+        assert got.predicted_latency == ref_plan.predicted_latency
+    assert np.all(ctrl.plan_j == CLOUD_ONLY)
+    assert ctrl.switch_count() == 0               # initial commits only
+
+
+def test_fleet_controller_initial_state():
+    space = random_space(5)
+    fleet = FleetPlanSpace.build(space, random_profiles(5, 3))
+    ctrl = FleetAdaptationController(fleet)
+    assert np.all(ctrl.plan_j == NO_PLAN)
+    assert np.all(np.isnan(ctrl.bw_est))
+    assert ctrl.switch_count() == 0
+    assert ctrl.history_for(0) == []
+    assert ctrl.plan_for(0) is None               # nothing committed yet

@@ -1,0 +1,149 @@
+"""Trace-shaped workloads: seed-determinism of the generated streams,
+bounded bandwidth walks, diurnal/flash-crowd shaping, and the end-to-end
+property the module exists for — a flash-crowd trace actually forces the
+fleet to re-decouple (adaptation events fire under the bandwidth drop)."""
+import numpy as np
+import pytest
+
+from repro.config.types import CLOUD_1080TI, EDGE_TX2, DeviceProfile
+from repro.core.adaptation import FleetAdaptationController
+from repro.core.latency import LatencyModel
+from repro.core.planner import FleetPlanSpace, PlanSpace
+from repro.core.predictor import PredictorTables
+from repro.serving.workloads import (
+    FleetTrace,
+    bandwidth_walks,
+    diurnal_rates,
+    make_trace,
+)
+
+
+def _plan_space(budget=0.2):
+    """A decision problem with a real bandwidth-dependent trade-off, the
+    paper's shape: early cuts ship big feature maps (cheap edge, big
+    transfer), deep cuts ship geometrically smaller ones — so the argmin
+    walks down the network as the link degrades (each adjacent-cut
+    boundary sits at roughly half the previous bandwidth), and a flash
+    crowd forces a switch. The 4-bit column is over budget everywhere,
+    keeping the feasibility mask live."""
+    n = 14
+    bits = [4, 8]
+    fmacs = np.full(n, 4e8)
+    lat = LatencyModel(fmacs, EDGE_TX2, CLOUD_1080TI, input_bytes=150_528.0)
+    i = np.arange(n)[:, None, None]
+    b = np.array(bits)[None, :, None]
+    size = np.broadcast_to(1e6 * (0.5 ** i) * (b / 8.0), (n, 2, 1))
+    acc = np.broadcast_to(
+        np.where(b == 8, 0.05 + 0.005 * i, 0.5), (n, 2, 1))
+    tables = PredictorTables(
+        points=[f"p{j}" for j in range(n)],
+        bits_choices=bits,
+        codecs=["huffman"],
+        acc_drop=acc.copy(),
+        size_bytes=size.copy(),
+        base_accuracy=0.9,
+    )
+    return PlanSpace.build(tables, lat, budget)
+
+
+def test_traces_are_seed_deterministic():
+    for kind in ("steady", "diurnal", "flash_crowd"):
+        a = make_trace(8, 40, seed=17, kind=kind)
+        b = make_trace(8, 40, seed=17, kind=kind)
+        assert np.array_equal(a.bw_walks, b.bw_walks)
+        assert np.array_equal(a.rates, b.rates)
+        assert np.array_equal(a.arrival_s, b.arrival_s)
+        assert np.array_equal(a.device_ids, b.device_ids)
+        assert np.array_equal(a.bandwidths, b.bandwidths)
+        other = make_trace(8, 40, seed=18, kind=kind)
+        assert not np.array_equal(a.bw_walks, other.bw_walks)
+
+
+def test_bandwidth_walks_bounded_and_shaped():
+    walks = bandwidth_walks(12, 200, seed=5, lo_bps=50e3, hi_bps=4e6)
+    assert walks.shape == (200, 12)
+    assert np.all(walks >= 50e3) and np.all(walks <= 4e6)
+    # a random walk actually moves: every device's series varies
+    assert np.all(walks.std(axis=0) > 0)
+
+
+def test_diurnal_rates_shape():
+    rates = diurnal_rates(100, base=0.1, peak=0.8)
+    assert rates.shape == (100,)
+    assert np.all((rates >= 0.1 - 1e-12) & (rates <= 0.8 + 1e-12))
+    assert rates[0] == pytest.approx(0.1)          # trough at t = 0
+    assert rates.max() == pytest.approx(0.8)       # one full period
+    assert diurnal_rates(0).shape == (0,)
+
+
+def test_trace_stream_is_causal_and_consistent():
+    trace = make_trace(6, 50, seed=9, kind="diurnal", dt_s=0.1)
+    assert trace.n_requests > 0
+    assert np.all(np.diff(trace.arrival_s) >= 0)   # arrival-ordered
+    # per-device FIFO and per-request bandwidth == the walk at its step
+    for d in range(trace.n_devices):
+        mine = trace.device_ids == d
+        assert np.all(np.diff(trace.arrival_s[mine]) > 0)
+        assert np.array_equal(trace.bandwidths[mine],
+                              trace.bw_walks[trace.step_ids[mine], d])
+    # arrivals live inside their step
+    assert np.all(trace.arrival_s >= trace.step_ids * trace.dt_s)
+    assert np.all(trace.arrival_s < (trace.step_ids + 1) * trace.dt_s)
+    reqs = trace.requests()
+    assert len(reqs) == trace.n_requests
+    assert all(r.batch is None for r in reqs)
+    assert [r.uid for r in reqs] == list(range(len(reqs)))
+    made = trace.requests(lambda uid, d: ("batch", uid, d))
+    assert made[3].batch == ("batch", 3, made[3].device_id)
+
+
+def test_flash_crowd_shapes_load_and_bandwidth():
+    n_steps = 60
+    flash = make_trace(10, n_steps, seed=21, kind="flash_crowd",
+                       flash_start=0.5, flash_len=0.2, flash_bw_drop=8.0,
+                       flash_load_spike=3.0)
+    steady = make_trace(10, n_steps, seed=21, kind="steady")
+    assert flash.flash_window_s is not None
+    lo, hi = flash.flash_window_s
+    t0, t1 = int(lo / flash.dt_s), int(hi / flash.dt_s)
+    assert t1 - t0 == int(n_steps * 0.2)
+    # inside the window: bandwidth / 8, arrival rate * 3 (same rng stream)
+    assert np.array_equal(flash.bw_walks[t0:t1],
+                          steady.bw_walks[t0:t1] / 8.0)
+    assert np.array_equal(flash.bw_walks[:t0], steady.bw_walks[:t0])
+    assert np.allclose(flash.rates[t0:t1], np.minimum(
+        steady.rates[t0:t1] * 3.0, 1.0))
+    mask = flash.in_flash_window(flash.arrival_s)
+    assert np.array_equal(mask, (flash.arrival_s >= lo)
+                          & (flash.arrival_s < hi))
+    assert steady.flash_window_s is None
+    assert not steady.in_flash_window(steady.arrival_s).any()
+
+
+def test_flash_crowd_fires_adaptation_events():
+    """Driving the vectorized fleet controller with a flash-crowd trace
+    re-decouples at least one device inside the drop window — the trace
+    actually exercises the adaptation machinery."""
+    space = _plan_space()
+    d = 8
+    rng = np.random.default_rng(2)
+    profiles = [
+        DeviceProfile(f"dev-{i}", float(rng.uniform(2e11, 5e12)),
+                      float(rng.uniform(0.8, 1.5)))
+        for i in range(d)
+    ]
+    fleet = FleetPlanSpace.build(space, profiles)
+    ctrl = FleetAdaptationController(fleet, default_bw=1e6)
+    trace = make_trace(d, 40, seed=13, kind="flash_crowd",
+                       mean_bps=2e6, flash_bw_drop=16.0)
+    switches_at = []
+    for t in range(trace.n_steps):
+        before = ctrl.switch_count()
+        ctrl.current_plans(trace.bw_walks[t])
+        if ctrl.switch_count() > before:
+            switches_at.append(t * trace.dt_s)
+    assert ctrl.switch_count() >= 1
+    assert any(trace.in_flash_window(np.array([t])).item()
+               for t in switches_at), (
+        f"no re-decoupling fired inside the flash window "
+        f"{trace.flash_window_s}; switches at {switches_at}")
