@@ -42,6 +42,51 @@ def save_result(name: str, payload: Dict) -> str:
     return path
 
 
+def flatten_metrics(payload: Dict, prefix: str = "") -> Dict[str, float]:
+    """Dotted-key flatten of a benchmark payload, keeping only scalar
+    numbers — the machine-readable slice of an arbitrary ``run()`` dict."""
+    out: Dict[str, float] = {}
+    for k, v in payload.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten_metrics(v, f"{key}."))
+        elif isinstance(v, bool):
+            out[key] = float(v)
+        elif isinstance(v, (int, float, np.integer, np.floating)):
+            out[key] = float(v)
+    return out
+
+
+def record_bench(name: str, metrics: Dict[str, float], *,
+                 quick: bool) -> str:
+    """Append one run to the perf trajectory ``results/BENCH_<name>.json``.
+
+    Unlike ``save_result`` (a snapshot, overwritten per run) the BENCH
+    file accumulates: every driver invocation appends a row, so speedup
+    ratios / throughput regressions are diffable across commits. Uniform
+    schema per run: ``{"quick", "n_devices", "metrics"}``."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+    doc = {"name": name, "schema": 1, "runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if prev.get("schema") == 1 and isinstance(prev.get("runs"),
+                                                      list):
+                doc = prev
+        except (json.JSONDecodeError, OSError):
+            pass          # corrupt trajectory: restart rather than crash
+    doc["runs"].append({
+        "quick": bool(quick),
+        "n_devices": len(jax.devices()),
+        "metrics": {k: float(v) for k, v in metrics.items()},
+    })
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=float)
+    return path
+
+
 _TABLE_CACHE: Dict = {}
 
 

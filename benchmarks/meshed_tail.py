@@ -1,0 +1,212 @@
+"""Meshed cloud tail: does sharding actually buy the big configs a cloud?
+
+Three gates, all deterministic on CPU (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``):
+
+1. **Parallel fraction (AOT, full granite-34b geometry).** The tail at the
+   mid decoupling point is compiled ahead-of-time — abstract params only,
+   no 68 GB weight materialization — once replicated and once sharded over
+   an 8-device mesh. XLA's ``cost_analysis`` flops are per-device AFTER
+   SPMD partitioning, so ``flops_single / flops_sharded`` is the achieved
+   compute parallelism at >= 8 in-flight requests; the gate is >= 2x
+   (measured ~7.9x). A deterministic stand-in for wall-clock speedup: fake
+   CPU mesh devices time-share one core, so wall-clock would measure the
+   simulator, not the partitioning.
+
+2. **HBM footprint (the "serves decoupled at all" gate).** Per-device
+   argument bytes (params + boundary) of the sharded tail must fit a real
+   accelerator's HBM (TPU v5e, 16 GiB) while the replicated tail must NOT
+   — i.e. the mesh is what makes granite-34b servable, not a nicety.
+
+3. **End-to-end equivalence (reduced geometry).** A FleetServer with
+   ``cloud_mesh`` serves a flash crowd through ONE fused sharded
+   decode+tail launch per plan group, float-close to the single-device
+   fused tail, with the planner's meshed cloud vector pinned bitwise to
+   the unmeshed one at mesh size 1.
+
+``run()`` returns the metric dict (the driver appends its scalars to
+``results/BENCH_meshed_tail.json``); standalone use:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src:. python benchmarks/meshed_tail.py --smoke
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import fmt_table, save_result
+from repro.config import JaladConfig, get_config
+from repro.config.types import EDGE_TK1, EDGE_TX2, TPU_V5E_ICI_BW
+from repro.core.latency import CloudMeshModel
+from repro.data.synthetic import make_batch
+from repro.launch.mesh import make_host_mesh
+from repro.models.api import build_model
+from repro.serving.edge_cloud import build_edge_cloud_server
+from repro.serving.fleet import FleetRequest, FleetServer
+from repro.serving.meshed import aot_tail_report
+
+ARCH = "granite-34b"
+TPU_V5E_HBM_BYTES = 16 * 2 ** 30          # v5e: 16 GiB HBM per chip
+MIN_PARALLEL_FRACTION = 2.0
+MIN_INFLIGHT = 8
+PROFILES = [EDGE_TX2, EDGE_TK1, EDGE_TX2, EDGE_TK1]
+
+
+def _aot_gates(quick: bool, mesh):
+    """Gates 1+2: compile-only analysis at FULL model geometry."""
+    cfg = get_config(ARCH)
+    model = build_model(cfg)
+    point = len(model.decoupling_points()) // 2
+    batch = MIN_INFLIGHT if quick else 2 * MIN_INFLIGHT
+    seq = 64 if quick else 128
+    single = aot_tail_report(model, point, batch=batch, seq_len=seq)
+    sharded = aot_tail_report(model, point, batch=batch, seq_len=seq,
+                              mesh=mesh)
+    frac = single["flops_per_device"] / max(sharded["flops_per_device"], 1.0)
+    rows = [[r["n_devices"],
+             f"{r['flops_per_device'] / 1e9:.1f}",
+             f"{r['argument_bytes_per_device'] / 2**30:.2f}",
+             f"{r['temp_bytes_per_device'] / 2**30:.2f}"]
+            for r in (single, sharded)]
+    print(f"[aot] {ARCH} tail @ point {point}, batch {batch}, seq {seq}")
+    print(fmt_table(rows, ["devices", "GFLOP/dev", "args GiB/dev",
+                           "temp GiB/dev"]))
+    print(f"[aot] parallel fraction: {frac:.2f}x "
+          f"(gate >= {MIN_PARALLEL_FRACTION}x at {batch} in-flight)")
+    assert batch >= MIN_INFLIGHT
+    assert frac >= MIN_PARALLEL_FRACTION, (
+        f"sharded tail achieved only {frac:.2f}x compute parallelism")
+    assert sharded["argument_bytes_per_device"] <= TPU_V5E_HBM_BYTES < \
+        single["argument_bytes_per_device"], (
+        "HBM gate: sharded tail must fit a 16 GiB device while the "
+        "replicated one must not — got "
+        f"{sharded['argument_bytes_per_device'] / 2**30:.2f} vs "
+        f"{single['argument_bytes_per_device'] / 2**30:.2f} GiB")
+    print(f"[aot] HBM gate: {sharded['argument_bytes_per_device']/2**30:.2f}"
+          f" GiB/dev sharded <= 16 GiB < "
+          f"{single['argument_bytes_per_device']/2**30:.2f} GiB replicated")
+    return {
+        "point": point,
+        "aot_batch": batch,
+        "flops_single": single["flops_per_device"],
+        "flops_per_device_sharded": sharded["flops_per_device"],
+        "parallel_fraction": frac,
+        "argument_gib_replicated": single["argument_bytes_per_device"]
+        / 2 ** 30,
+        "argument_gib_per_device_sharded":
+            sharded["argument_bytes_per_device"] / 2 ** 30,
+        "hbm_gate_gib": TPU_V5E_HBM_BYTES / 2 ** 30,
+    }
+
+
+def _requests(cfg, seq, waves):
+    reqs, uid = [], 0
+    for _ in range(waves):
+        for d in range(len(PROFILES)):
+            reqs.append(FleetRequest(uid=uid, device_id=d,
+                                     batch=dict(make_batch(cfg, 1, seq,
+                                                           seed=uid)),
+                                     bandwidth=3e5))
+            uid += 1
+    return reqs
+
+
+def _e2e_gate(quick: bool, mesh):
+    """Gate 3: the large config (reduced geometry — full weights do not
+    fit host RAM, which is the point) serves decoupled through
+    FleetServer, one fused sharded launch per group, float-close to the
+    single-device fused tail."""
+    seq = 16 if quick else 32
+    waves = 2 if quick else 4
+    cfg = get_config(ARCH).reduced()
+    jc = JaladConfig(bits_choices=(4, 8), codec_choices=("bitpack",),
+                     accuracy_drop_budget=0.5, bandwidth_bytes_per_s=1e6)
+    srv, params = build_edge_cloud_server(
+        cfg, jc, calib_batches=1, calib_batch_size=2, seq_len=seq)
+
+    ref = FleetServer(srv.engine, params, PROFILES, fuse_cloud_tail=True)
+    t0 = time.perf_counter()
+    done_ref = ref.serve(_requests(cfg, seq, waves))
+    t_single = time.perf_counter() - t0
+
+    meshed = FleetServer(srv.engine, params, PROFILES, cloud_mesh=mesh)
+    t0 = time.perf_counter()
+    done = meshed.serve(_requests(cfg, seq, waves))
+    t_mesh = time.perf_counter() - t0
+
+    worker = meshed.mesh_worker
+    assert worker.fused_calls >= 1
+    assert max(worker.group_sizes) >= MIN_INFLIGHT, worker.group_sizes
+    by_ref = {r.uid: r for r in done_ref}
+    for r in done:
+        np.testing.assert_allclose(
+            np.asarray(r.logits, np.float32),
+            np.asarray(by_ref[r.uid].logits, np.float32),
+            rtol=2e-4, atol=2e-5)
+    n = len(done)
+    print(f"[e2e] {n} requests, fused groups {worker.group_sizes}, "
+          f"float-close to single-device fused tail")
+    print(f"[e2e] wall: single-device {t_single:.2f}s, meshed {t_mesh:.2f}s "
+          "(fake-device wall time is NOT the speedup metric; see [aot])")
+    return {
+        "e2e_requests": n,
+        "fused_calls": worker.fused_calls,
+        "max_group": max(worker.group_sizes),
+        "makespan_s": meshed.makespan_s,
+        "throughput_req_per_s": n / max(meshed.makespan_s, 1e-12),
+        "wall_single_s": t_single,
+        "wall_meshed_s": t_mesh,
+    }, srv
+
+
+def _planner_report(srv, mesh):
+    """Planner side: the meshed cloud model is bitwise identity at M = 1
+    and re-prices T_C as the mesh widens (the split-shift acceptance test
+    lives in tests/test_planner.py on an analytic space)."""
+    space = srv.engine.plan_space
+    m = int(mesh.size)
+    pin = space.with_cloud_mesh(CloudMeshModel(1, 0.0))
+    assert np.array_equal(pin.base, space.base), "M=1 must be bitwise"
+    bw = 3e5
+    boundary_bytes = float(space.size_flat.min())
+    meshed = space.with_cloud_mesh(CloudMeshModel.from_interconnect(
+        m, boundary_bytes, TPU_V5E_ICI_BW))
+    p1, pm = space.decide(bw), meshed.decide(bw)
+    ratio = meshed.cloud_exec_full() / max(space.cloud_exec_full(), 1e-30)
+    print(f"[plan] split point {p1.point} (M=1) -> {pm.point} (M={m}); "
+          f"cloud-only exec scaled x{ratio:.3f}")
+    return {"plan_point_m1": p1.point, "plan_point_meshed": pm.point,
+            "mesh_devices": m, "cloud_exec_scale": ratio}
+
+
+def run(quick: bool = True):
+    if len(jax.devices()) < 8:
+        print(f"[meshed_tail] SKIP: needs 8 devices, have "
+              f"{len(jax.devices())} (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)")
+        return {"skipped": True}
+    out = {}
+    out.update(_aot_gates(quick, make_host_mesh(model_axis=8)))
+    e2e, srv = _e2e_gate(quick, make_host_mesh(model_axis=4))
+    out.update(e2e)
+    out.update(_planner_report(srv, make_host_mesh(model_axis=8)))
+    save_result("meshed_tail", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--smoke", action="store_true",
+                   help="quick mode (default)")
+    g.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    result = run(quick=not args.full)
+    if result.get("skipped"):
+        raise SystemExit(1)
+    print("meshed_tail: all gates passed")

@@ -27,6 +27,7 @@ MODULES = [
     "codec",
     "fleet",
     "pipeline_serving",
+    "meshed_tail",
     "roofline",
 ]
 
@@ -45,7 +46,15 @@ def main(argv=None) -> int:
         print(f"\n{'=' * 72}\n== benchmarks.{name}\n{'=' * 72}")
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            mod.run(quick=quick)
+            payload = mod.run(quick=quick)
+            if isinstance(payload, dict):
+                # Machine-readable trajectory: every scalar in the payload
+                # appends to results/BENCH_<name>.json (see record_bench).
+                from benchmarks.common import flatten_metrics, record_bench
+
+                metrics = flatten_metrics(payload)
+                if metrics:
+                    record_bench(name, metrics, quick=quick)
             print(f"-- {name} OK ({time.perf_counter() - t0:.1f}s)")
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()

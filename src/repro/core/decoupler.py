@@ -55,6 +55,10 @@ class DecoupledRunner:
     model: Model
     params: Any
     plan: DecoupledPlan
+    # Optional repro.serving.meshed.MeshedCloudWorker: when set,
+    # cloud_step_batch routes batchable groups through the sharded mesh
+    # tail (see cloud_step_batch).
+    mesh_worker: Optional[Any] = None
 
     def __post_init__(self):
         from repro.codec import get_codec
@@ -105,15 +109,32 @@ class DecoupledRunner:
         tail forward; that is the fastest path but only float-level
         equivalent (XLA re-blocks matmul/conv reductions per batch size,
         so bitwise equality across batch shapes is impossible on CPU —
-        measured ~1e-6 relative). Requests carrying ``extras`` or
-        boundaries whose trailing dims differ fall back to the
-        per-request loop."""
+        measured ~1e-6 relative; the contract is tolerance-pinned in
+        ``tests/test_meshed.py::test_fused_tail_float_contract``).
+        Requests carrying ``extras`` or boundaries whose trailing dims
+        differ fall back to the per-request loop.
+
+        With a ``mesh_worker`` wired in, the group goes down the
+        mesh-aware path first: one sharded wire decode straight into
+        per-device batch shards, ``sharding.activation.constrain`` on the
+        boundary, and ONE tail forward with NamedSharding-annotated
+        params across the whole mesh. That path is inherently fused —
+        same float-equivalence contract as ``fuse_tail=True`` — and can
+        additionally batch same-structure ``extras`` (transformer
+        position/encoder trees). Groups the worker cannot shard
+        (mixed codecs, non-stackable extras) fall through to the
+        single-device logic below."""
         from repro.codec import get_codec
 
         if extras_list is None:
             extras_list = [None] * len(blobs)
         if not blobs:
             return []
+        if self.mesh_worker is not None:
+            out = self.mesh_worker.try_cloud_step_batch(
+                blobs, extras_list, self.plan)
+            if out is not None:
+                return out
         batchable = (
             len(blobs) > 1
             and all(e is None for e in extras_list)
@@ -238,5 +259,18 @@ class JaladEngine:
         return _dc.replace(self, latency=lat,
                            _plan_space=self.plan_space.with_edge(edge_profile))
 
-    def make_runner(self, params, plan: DecoupledPlan) -> DecoupledRunner:
-        return DecoupledRunner(self.model, params, plan)
+    def with_cloud_mesh(self, mesh_model) -> "JaladEngine":
+        """An engine whose PlanSpace prices the cloud side under a
+        :class:`~repro.core.latency.CloudMeshModel` (T_C / M + per-layer
+        collectives) — the planner-side half of the meshed cloud worker.
+        Identity at mesh size 1; ``for_edge`` views derived from this
+        engine keep the meshed cloud vector."""
+        import dataclasses as _dc
+
+        return _dc.replace(
+            self, _plan_space=self.plan_space.with_cloud_mesh(mesh_model))
+
+    def make_runner(self, params, plan: DecoupledPlan,
+                    mesh_worker: Optional[Any] = None) -> DecoupledRunner:
+        return DecoupledRunner(self.model, params, plan,
+                               mesh_worker=mesh_worker)

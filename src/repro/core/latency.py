@@ -27,6 +27,47 @@ def _freeze(a: np.ndarray) -> np.ndarray:
     return a
 
 
+@dataclass(frozen=True)
+class CloudMeshModel:
+    """Mesh-parallel scaling of the cloud side of the objective.
+
+    The paper assumes a single "conventional cloud" device; a meshed cloud
+    tail (``repro.serving.meshed``) runs the post-cut layers SPMD across M
+    devices. The planner models that as
+
+        T_C^mesh(i) = T_C(i) / M  +  collective_s_per_point * (N - 1 - i)
+
+    — ideal compute scaling plus one per-remaining-layer collective term
+    (tensor-parallel layers all-reduce their activations once per layer;
+    ``from_interconnect`` prices that as a ring all-reduce of the boundary
+    activation over the mesh interconnect). The M = 1, coll = 0 default is
+    bitwise-identical to the unmeshed model (``x / 1.0`` and ``x + 0.0``
+    preserve every float64 bit for non-negative times), which is what lets
+    ``PlanSpace.with_cloud_mesh`` stay oracle-pinned at mesh size 1.
+    """
+
+    n_devices: int = 1
+    collective_s_per_point: float = 0.0
+
+    def __post_init__(self):
+        if self.n_devices < 1:
+            raise ValueError("cloud mesh needs at least one device")
+        if self.collective_s_per_point < 0:
+            raise ValueError("collective term must be non-negative")
+
+    @classmethod
+    def from_interconnect(cls, n_devices: int, activation_bytes: float,
+                          ici_bytes_per_s: float) -> "CloudMeshModel":
+        """Price the per-layer collective as a ring all-reduce of one
+        activation-sized tensor: 2 (M-1)/M * bytes / link_BW."""
+        m = int(n_devices)
+        if m <= 1:
+            return cls(max(m, 1), 0.0)
+        coll = 2.0 * (m - 1) / m * float(activation_bytes) / float(
+            ici_bytes_per_s)
+        return cls(m, coll)
+
+
 @dataclass
 class LatencyModel:
     """Latency bookkeeping for one model on one (edge, cloud, BW) setup.

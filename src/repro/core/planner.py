@@ -56,7 +56,7 @@ import numpy as np
 
 from repro.config.types import DeviceProfile
 from repro.core.ilp import ILPProblem, ILPSolution
-from repro.core.latency import LatencyModel, _freeze
+from repro.core.latency import CloudMeshModel, LatencyModel, _freeze
 
 if TYPE_CHECKING:  # runtime import would cycle (decoupler imports planner)
     from repro.core.decoupler import DecoupledPlan
@@ -113,6 +113,13 @@ class PlanSpace:
     size_flat: np.ndarray              # (N, C*K) wire bytes PER BATCH
     acc_flat: np.ndarray               # (N, C*K) accuracy drop
     feasible: np.ndarray               # (N, C*K) bool, acc <= budget
+    # Mesh-parallel cloud model (see with_cloud_mesh). cloud_vec above is
+    # ALWAYS the meshed vector (identity at the default M=1, coll=0);
+    # cloud_vec_single keeps the single-device vector so meshed views can
+    # be re-derived without compounding.
+    cloud_mesh: CloudMeshModel = CloudMeshModel()
+    n_model_points: int = 0            # total decoupling points of the model
+    cloud_vec_single: np.ndarray = field(repr=False, default=None)
     # Fused-argmin operands: base = edge + cloud, +inf where infeasible
     # (size_flat/BW is finite, so an infeasible cell can never win).
     base: np.ndarray = field(repr=False, default=None)
@@ -149,10 +156,13 @@ class PlanSpace:
             size_flat=size_flat,
             acc_flat=acc_flat,
             feasible=acc_flat <= float(budget),
+            n_model_points=latency.n_points,
         ).finalize()
 
     def finalize(self) -> "PlanSpace":
         """Derive the cached argmin operands; returns self for chaining."""
+        if self.cloud_vec_single is None:
+            object.__setattr__(self, "cloud_vec_single", self.cloud_vec)
         base_raw = self.edge_vec[:, None] + self.cloud_vec[:, None]
         base_raw = np.broadcast_to(base_raw, self.size_flat.shape)
         base = np.where(self.feasible, base_raw, np.inf)
@@ -176,6 +186,36 @@ class PlanSpace:
                        base=None, base_raw=None,
                        _row_of_point=None).finalize()
 
+    def with_cloud_mesh(self, mesh: CloudMeshModel) -> "PlanSpace":
+        """A mesh-aware view: same tables, same edge vector, cloud-time
+        vector rescaled by the mesh model
+
+            T_C^mesh(i) = T_C(i) / M + coll * (layers after i)
+
+        (ideal M-way compute scaling + one collective per remaining
+        layer). Derived from ``cloud_vec_single`` so meshed views never
+        compound, and bitwise-identical to the unmeshed space at
+        ``CloudMeshModel(1, 0.0)`` — ``x / 1.0`` and ``x + 0.0 * n``
+        preserve the float64 bits of non-negative times (oracle-pinned in
+        ``tests/test_planner.py``)."""
+        n_total = self.n_model_points or (
+            max(self.point_rows) + 1 if self.point_rows else 0)
+        remaining = (float(n_total) - 1.0
+                     - np.asarray(self.point_rows, dtype=np.float64))
+        vec = (self.cloud_vec_single / float(mesh.n_devices)
+               + float(mesh.collective_s_per_point) * remaining)
+        return replace(self, cloud_mesh=mesh, cloud_vec=_readonly(vec),
+                       base=None, base_raw=None,
+                       _row_of_point=None).finalize()
+
+    def cloud_exec_full(self) -> float:
+        """Full-network cloud execution time under the mesh model — the
+        T_C term of the cloud-only fallback. Identity at mesh size 1."""
+        m = self.cloud_mesh
+        return (self.cloud.exec_time(self.total_fmacs) / float(m.n_devices)
+                + float(m.collective_s_per_point) * float(
+                    self.n_model_points or len(self.point_rows)))
+
     # ------------------------------------------------------------ queries
     @property
     def n_choices(self) -> int:
@@ -194,14 +234,14 @@ class PlanSpace:
         per-batch, the same unit as the ``size_flat`` wire bytes, so this
         is directly comparable against every decoupled cell."""
         return (self.input_bytes * image_ratio / float(bandwidth)
-                + self.cloud.exec_time(self.total_fmacs))
+                + self.cloud_exec_full())
 
     def stage_times(self, plan: "DecoupledPlan") -> Tuple[float, float]:
         """(T_E, T_C) of a concrete plan — the single lookup the serving
         runtimes use for simulated-clock accounting. Cloud-only plans run
         the whole network on the cloud."""
         if plan.is_cloud_only:
-            return 0.0, self.cloud.exec_time(self.total_fmacs)
+            return 0.0, self.cloud_exec_full()
         row = self._row_of_point.get(plan.point)
         if row is None:
             raise KeyError(
@@ -410,7 +450,7 @@ class FleetPlanSpace:
             flops_vec=flops_vec,
             j_star=_freeze(masked.argmin(axis=1)),
             s_star=_readonly(masked.min(axis=1)),
-            cloud_only_exec=space.cloud.exec_time(space.total_fmacs),
+            cloud_only_exec=space.cloud_exec_full(),
         )
 
     # ------------------------------------------------------------ queries

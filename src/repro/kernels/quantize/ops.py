@@ -359,6 +359,53 @@ def dequantize_wire_batch(
                                       block_m, interpret, out_dtype)
 
 
+@functools.lru_cache(maxsize=None)
+def _wire_decode_sharded_fn(mesh, batch_axis, bits, shape, block_m,
+                            interpret, out_dtype):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    row = NamedSharding(mesh, P(batch_axis))          # (B,) scalars
+    codes = NamedSharding(mesh, P(batch_axis, None))  # (B, n_wire)
+    out = NamedSharding(mesh, P(batch_axis, *([None] * len(shape))))
+
+    def fn(codes_flat, mn, mx):
+        return dequantize_wire_batch_impl(codes_flat, mn, mx, bits, shape,
+                                          block_m, interpret, out_dtype)
+
+    return jax.jit(fn, in_shardings=(codes, row, row), out_shardings=out)
+
+
+def dequantize_wire_batch_sharded(
+    codes_flat,
+    mn,
+    mx,
+    bits: int,
+    shape: Tuple[int, ...],
+    mesh,
+    batch_axis: str = "data",
+    block_m: int = k.DEFAULT_BLOCK_M,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+):
+    """:func:`dequantize_wire_batch` decoding straight into per-device
+    batch shards: the (B, n_wire) codes enter sharded over ``batch_axis``
+    and the (B, *shape) activations LEAVE sharded the same way — no host
+    gather, no replicated intermediate, ready for a sharded tail forward
+    (each sample still decodes bit-identically to decoding it alone;
+    pinned in ``tests/test_meshed.py``). B must divide the mesh's
+    ``batch_axis`` extent — the meshed cloud worker pads the group to a
+    multiple before calling. The sharded-jitted callable is cached per
+    (mesh, wire format)."""
+    if interpret is None:
+        interpret = _should_interpret()
+    fn = _wire_decode_sharded_fn(
+        mesh, str(batch_axis), int(bits), tuple(int(s) for s in shape),
+        int(block_m), bool(interpret), jnp.dtype(out_dtype),
+    )
+    return fn(jnp.asarray(codes_flat), jnp.asarray(mn, jnp.float32),
+              jnp.asarray(mx, jnp.float32))
+
+
 # ---------------------------------------------------------------------------
 # Per-channel codec: fused vector-range quantize + in-kernel c-bit pack
 # ---------------------------------------------------------------------------

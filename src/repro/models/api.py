@@ -228,6 +228,16 @@ class Model:
         outs = [self.run_head(params, batch, p) for p in pts]
         return [o if isinstance(o, tuple) else (o, None) for o in outs]
 
+    def boundary_logical_axes(self, ndim: int):
+        """Logical axis names of the boundary activation crossing the cut
+        (rank ``ndim``). The meshed cloud worker pins these on entry:
+        batch resolves to the "data" mesh axis per the rule table; the
+        remaining activation dims (spatial / seq / embed) stay replicated
+        so the NamedSharding-annotated params carry the "model" axis."""
+        if self.cfg.family == "cnn":
+            return ("batch",) + (None,) * (ndim - 1)
+        return ("batch", "seq", "embed")[:ndim] + (None,) * max(0, ndim - 3)
+
     def run_tail(self, params, boundary, point: int, extras=None):
         cfg = self.cfg
         if cfg.family == "cnn":

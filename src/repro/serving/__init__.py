@@ -16,6 +16,7 @@ from repro.serving.fleet import (
     FleetServer,
     build_fleet_server,
 )
+from repro.serving.meshed import MeshedCloudWorker, aot_tail_report
 from repro.serving.workloads import (
     FleetTrace,
     bandwidth_walks,
@@ -39,7 +40,9 @@ __all__ = [
     "GenRequest",
     "EdgeCloudServer",
     "LatencyBreakdown",
+    "MeshedCloudWorker",
     "RunnerCache",
+    "aot_tail_report",
     "PipelinedEdgeCloudServer",
     "PipelineRequest",
     "StageTimeline",

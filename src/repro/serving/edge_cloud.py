@@ -44,10 +44,15 @@ class LatencyBreakdown:
 class RunnerCache:
     """(point, bits, codec) -> DecoupledRunner, shared by the synchronous
     and the pipelined servers. Thread-safe: the pipelined server warms it
-    from an adaptation listener while the edge stage reads it."""
+    from an adaptation listener while the edge stage reads it.
+
+    ``mesh_worker`` (a :class:`~repro.serving.meshed.MeshedCloudWorker`)
+    is threaded into every runner built here, so all cached plans share
+    ONE mesh + sharded param tree for their batched cloud steps."""
 
     engine: JaladEngine
     params: Any
+    mesh_worker: Optional[Any] = None
     _cache: Dict[Tuple[int, int, str], DecoupledRunner] = field(
         default_factory=dict
     )
@@ -77,7 +82,8 @@ class RunnerCache:
             # Build outside the lock: a miss (e.g. the adaptation listener
             # pre-registering a new plan) must not stall hits from the
             # other pipeline stages.
-            runner = self.engine.make_runner(self.params, plan)
+            runner = self.engine.make_runner(self.params, plan,
+                                             mesh_worker=self.mesh_worker)
             with self._lock:
                 runner = self._cache.setdefault(key, runner)
         return runner

@@ -160,6 +160,18 @@ class FleetServer:
     # per serving wave. False: the per-device AdaptationController loop,
     # kept as the reference path the vectorized one is pinned against.
     vectorized: bool = True
+    # Optional jax Mesh: shard the shared cloud worker across it. Grouped
+    # requests then decode + forward through ONE sharded fused launch
+    # (repro.serving.meshed.MeshedCloudWorker — float-equivalent to the
+    # single-device tails, same contract as fuse_cloud_tail=True), and
+    # the planner prices the cloud side under the matching
+    # CloudMeshModel, so plans genuinely shift as the mesh widens.
+    cloud_mesh: Optional[Any] = None
+    # Planner-side per-remaining-layer collective seconds for the mesh
+    # model (0.0 = ideal scaling; CloudMeshModel.from_interconnect prices
+    # a real interconnect).
+    cloud_collective_s: float = 0.0
+    mesh_worker: Optional[Any] = None
     runners: Optional[RunnerCache] = None
     devices: List[FleetDevice] = field(default_factory=list)
     completed: List[FleetRequest] = field(default_factory=list)
@@ -177,8 +189,21 @@ class FleetServer:
     def __post_init__(self):
         if not self.edge_profiles:
             raise ValueError("FleetServer needs at least one edge profile")
+        if self.cloud_mesh is not None:
+            from repro.core.latency import CloudMeshModel
+            from repro.serving.meshed import MeshedCloudWorker
+
+            # Planner and worker see the SAME mesh: the decision space is
+            # re-derived with the mesh-parallel cloud model (identity at
+            # size 1) before the fleet plane is stacked over it.
+            self.engine = self.engine.with_cloud_mesh(CloudMeshModel(
+                int(self.cloud_mesh.size), float(self.cloud_collective_s)))
+            if self.mesh_worker is None:
+                self.mesh_worker = MeshedCloudWorker(
+                    self.engine.model, self.params, self.cloud_mesh)
         if self.runners is None:
-            self.runners = RunnerCache(self.engine, self.params)
+            self.runners = RunnerCache(self.engine, self.params,
+                                       mesh_worker=self.mesh_worker)
         d = len(self.edge_profiles)
         if self.fleet_space is None:
             self.fleet_space = FleetPlanSpace.build(
@@ -421,6 +446,9 @@ def build_fleet_server(
     points: Optional[List[int]] = None,
     cloud_batch: int = 8,
     vectorized: bool = True,
+    cloud_mesh: Any = None,
+    cloud_collective_s: float = 0.0,
+    fuse_cloud_tail: bool = False,
 ) -> Tuple[FleetServer, Any]:
     """End-to-end factory: one calibration (tables are device-independent),
     one PlanSpace, one stacked FleetPlanSpace over the device profiles."""
@@ -432,5 +460,8 @@ def build_fleet_server(
         points=points,
     )
     fleet = FleetServer(srv.engine, params, list(edge_profiles),
-                        cloud_batch=cloud_batch, vectorized=vectorized)
+                        cloud_batch=cloud_batch, vectorized=vectorized,
+                        cloud_mesh=cloud_mesh,
+                        cloud_collective_s=cloud_collective_s,
+                        fuse_cloud_tail=fuse_cloud_tail)
     return fleet, params

@@ -21,15 +21,41 @@ from jax.sharding import Mesh, NamedSharding
 from repro.sharding.rules import resolve_spec
 
 
-def _ambient_mesh() -> Optional[Mesh]:
+def _thread_resources():
+    """The jax thread-resources object holding the ambient mesh, via the
+    public surface first (versioned fallback chain):
+
+      1. ``jax.interpreters.pxla.thread_resources`` — the documented
+         re-export, stable across jax 0.3–0.5;
+      2. ``jax._src.mesh.thread_resources`` — the underlying internal,
+         for versions that drop the re-export.
+
+    Only missing-module/missing-attribute errors fall through; anything
+    else propagates. The old blanket ``except Exception`` silently
+    disabled every activation constraint whenever the internals moved —
+    the exact failure mode a sharding regression test cannot see.
+    """
+    try:
+        from jax.interpreters import pxla
+
+        return pxla.thread_resources
+    except (ImportError, AttributeError):
+        pass
     try:
         from jax._src import mesh as mesh_lib
 
-        m = mesh_lib.thread_resources.env.physical_mesh
-        if m is not None and not m.empty:
-            return m
-    except Exception:  # noqa: BLE001 — jax internals moved; degrade to no-op
+        return mesh_lib.thread_resources
+    except (ImportError, AttributeError):
         return None
+
+
+def _ambient_mesh() -> Optional[Mesh]:
+    """The mesh of the innermost ``with mesh:`` block, or None."""
+    res = _thread_resources()
+    env = getattr(res, "env", None)
+    m = getattr(env, "physical_mesh", None)
+    if m is not None and not m.empty:
+        return m
     return None
 
 

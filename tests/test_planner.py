@@ -247,3 +247,140 @@ def test_controller_bw_is_a_real_dataclass_field():
     assert AdaptationController.__dataclass_fields__["bw"].default is None
     c = AdaptationController(engine=object(), bw=5e5)   # now in __init__
     assert c.bw == 5e5
+
+
+# ---------------------------------------------------------------------------
+# Mesh-parallel cloud model (with_cloud_mesh)
+# ---------------------------------------------------------------------------
+
+
+def _mesh():
+    from repro.core.latency import CloudMeshModel
+
+    return CloudMeshModel
+
+
+def test_cloud_mesh_model_from_interconnect():
+    CloudMeshModel = _mesh()
+    m = CloudMeshModel.from_interconnect(8, 1e6, 50e9)
+    assert m.n_devices == 8
+    # ring all-reduce: 2 (M-1)/M * bytes / link_BW
+    assert np.isclose(m.collective_s_per_point, 2 * 7 / 8 * 1e6 / 50e9)
+    # degenerate meshes price no collectives at all
+    assert CloudMeshModel.from_interconnect(1, 1e9, 1.0) == \
+        CloudMeshModel(1, 0.0)
+    with pytest.raises(ValueError):
+        CloudMeshModel(0)
+    with pytest.raises(ValueError):
+        CloudMeshModel(2, -1e-9)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=50, deadline=None)
+def test_with_cloud_mesh_identity_at_size_one(seed):
+    """Oracle pin: CloudMeshModel(1, 0.0) must be BITWISE identity —
+    same cloud vector, same argmin operands, same decisions — so turning
+    the mesh plumbing on with one device can never perturb a plan."""
+    CloudMeshModel = _mesh()
+    space, _, _, _ = random_space(seed)
+    meshed = space.with_cloud_mesh(CloudMeshModel(1, 0.0))
+    assert np.array_equal(meshed.cloud_vec, space.cloud_vec)
+    assert np.array_equal(meshed.base, space.base)
+    assert np.array_equal(meshed.base_raw, space.base_raw)
+    bw = random_bw(seed)
+    assert meshed.cloud_only_time(bw) == space.cloud_only_time(bw)
+    a, b = space.decide(bw), meshed.decide(bw)
+    assert (a.point, a.bits, a.codec) == (b.point, b.bits, b.codec)
+    assert a.predicted_latency == b.predicted_latency
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=50, deadline=None)
+def test_meshed_space_agrees_with_oracles(seed):
+    """The meshed view stays inside the planner's correctness contract:
+    its fused argmin still matches both ILP oracle solvers (the oracles
+    consume the meshed ILPProblem, so all three see T_C/M + coll)."""
+    CloudMeshModel = _mesh()
+    space, _, _, _ = random_space(seed)
+    rng = np.random.default_rng(seed ^ 0xC0)
+    meshed = space.with_cloud_mesh(CloudMeshModel(
+        int(rng.integers(2, 9)), float(rng.random() * 1e-4)))
+    bw = random_bw(seed)
+    plan = meshed.decide(bw)
+    problem = meshed.ilp_problem(bw)
+    enum = solve_enumeration(problem)
+    bnb = solve_branch_and_bound(problem)
+    if enum is None:
+        assert bnb is None and plan.is_cloud_only
+    else:
+        assert plan.predicted_latency == enum.objective == bnb.objective
+
+
+def test_with_cloud_mesh_never_compounds():
+    """Meshed views re-derive from the single-device cloud vector, so
+    stacking with_cloud_mesh calls rescales from the same base instead of
+    dividing twice."""
+    CloudMeshModel = _mesh()
+    space, _, _, _ = random_space(11)
+    twice = (space.with_cloud_mesh(CloudMeshModel(4, 1e-5))
+             .with_cloud_mesh(CloudMeshModel(1, 0.0)))
+    assert np.array_equal(twice.cloud_vec, space.cloud_vec)
+    assert np.array_equal(twice.base, space.base)
+
+
+def _handmade_space(n=32, a=2e-3, b=1e-3, s0=6.06e6):
+    """A PlanSpace with an analytically-known optimum: T_E = a(i+1),
+    T_C = b(N-1-i), S_i = s0 e^{-0.3 i} (transfer shrinks with depth).
+    At BW = 1e6 the interior argmin sits near i = 25 for M = 1 and moves
+    to ~23 as M -> inf (the cloud term's slope -b/M flattens, so deeper
+    cuts stop paying off)."""
+    from repro.config.types import CLOUD_1080TI, EDGE_TX2
+    from repro.core.planner import PlanSpace, _readonly
+
+    i = np.arange(n, dtype=np.float64)
+    return PlanSpace(
+        point_rows=tuple(range(n)),
+        bits_choices=(8,),
+        codecs=("bitpack",),
+        budget=0.1,
+        edge=EDGE_TX2,
+        cloud=CLOUD_1080TI,
+        cum_fmacs=_readonly(np.zeros(n)),
+        total_fmacs=0.0,
+        input_bytes=1e7,
+        edge_vec=_readonly(a * (i + 1.0)),
+        cloud_vec=_readonly(b * (n - 1.0 - i)),
+        size_flat=_readonly((s0 * np.exp(-0.3 * i))[:, None]),
+        acc_flat=_readonly(np.zeros((n, 1))),
+        feasible=np.ones((n, 1), dtype=bool),
+        n_model_points=n,
+    ).finalize()
+
+
+def test_mesh_widening_shifts_split_earlier():
+    """Acceptance: as the cloud mesh widens, the chosen decoupling point
+    moves EARLIER (cloud compute gets cheaper relative to edge compute,
+    so shipping sooner wins) — monotonically, and strictly somewhere."""
+    CloudMeshModel = _mesh()
+    space = _handmade_space()
+    bw = 1e6
+    points = []
+    for m in (1, 2, 4, 8, 16):
+        plan = space.with_cloud_mesh(CloudMeshModel(m, 0.0)).decide(bw)
+        assert not plan.is_cloud_only
+        points.append(plan.point)
+    # interior optimum (the shift is real, not an endpoint artifact)
+    assert 0 < points[-1] <= points[0] < space.size_flat.shape[0] - 1
+    assert all(p2 <= p1 for p1, p2 in zip(points, points[1:]))
+    assert points[-1] < points[0]
+
+
+def test_collective_term_pushes_split_later():
+    """The opposite force: pricing per-remaining-layer collectives makes
+    LATE cuts (few remaining layers) relatively cheaper, so the split
+    moves deeper as the interconnect slows."""
+    CloudMeshModel = _mesh()
+    space = _handmade_space()
+    free = space.with_cloud_mesh(CloudMeshModel(8, 0.0)).decide(1e6)
+    slow = space.with_cloud_mesh(CloudMeshModel(8, 1e-3)).decide(1e6)
+    assert slow.point > free.point

@@ -109,3 +109,101 @@ def test_param_logical_axes_cover_every_param(arch):
         assert len(s.shape) == len(a)
         _check_spec(s.shape, a, MESH_1POD)
         _check_spec(s.shape, a, MESH_2POD)
+
+# ---------------------------------------------------------------------------
+# Explicit fallback pins (the two archs whose geometry defeats the rules)
+# ---------------------------------------------------------------------------
+
+
+def test_yi6b_kv_heads_fallback_pin():
+    """yi-6b GQA cache (4 KV heads on a 16-wide model axis): kv_heads must
+    fall back to None and kv_seq picks up the 'model' axis — exact spec,
+    not just 'something was unsharded'."""
+    spec = resolve_spec((2, 128, 4, 128),
+                        ("batch", "kv_seq", "kv_heads", "head_dim"),
+                        MESH_1POD)
+    assert spec == P(None, "model")
+
+
+def test_grok1_expert_fallback_pin():
+    """grok-1 MoE (8 experts, 16-wide axes): the expert dim divides no
+    candidate, ffn absorbs the full ('data','model') product, embed stays
+    replicated by the rule table."""
+    spec = resolve_spec((8, 6144, 32768), ("expert", "embed", "ffn"),
+                        MESH_1POD)
+    assert spec == P(None, None, ("data", "model"))
+
+
+@given(
+    st.lists(st.sampled_from(
+        ["batch", "seq", "ffn", "heads", "kv_heads", "vocab", "embed",
+         "expert", "kv_seq", None]
+    ), min_size=1, max_size=4),
+    st.lists(st.sampled_from([1, 2, 3, 4, 8, 16, 17, 48, 128, 256, 50304]),
+             min_size=1, max_size=4),
+)
+@settings(max_examples=100, deadline=None)
+def test_resolver_assignments_come_from_the_rule_table(logical, dims):
+    """Every non-None spec entry is one of ITS OWN logical name's
+    candidates (never an axis borrowed from another dim's rule), and
+    unnamed (None) dims are never sharded."""
+    n = min(len(logical), len(dims))
+    logical, shape = tuple(logical[:n]), tuple(dims[:n])
+    for mesh in (MESH_1POD, MESH_2POD):
+        spec = resolve_spec(shape, logical, mesh)
+        for i in range(len(spec)):
+            if spec[i] is None:
+                continue
+            assert logical[i] is not None
+            got = (spec[i] if isinstance(spec[i], tuple) else (spec[i],))
+            assert got in [tuple(c) for c in DEFAULT_RULES[logical[i]]]
+
+
+# ---------------------------------------------------------------------------
+# Ambient-mesh regression (activation.constrain)
+# ---------------------------------------------------------------------------
+
+
+def test_constrain_is_noop_outside_mesh():
+    """Outside any ``with mesh:`` scope constrain must return its input
+    unchanged (identity, not a copy) — eager edge-side code paths call it
+    unconditionally."""
+    from repro.sharding.activation import constrain
+
+    x = np.arange(6.0).reshape(2, 3)
+    assert constrain(x, ("batch", "embed")) is x
+
+
+def test_constrain_applies_inside_real_mesh():
+    """Inside a real (1-device) mesh scope, constrain must emit an actual
+    with_sharding_constraint with the rule-table spec. Guards the ambient
+    -mesh probe: the seed-era blanket ``except Exception`` silently turned
+    EVERY constraint into a no-op when the jax-internal import moved.
+    (8-device version: tests/meshed_subprocess.py.)"""
+    import jax.numpy as jnp
+
+    from repro.sharding.activation import constrain
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    x = jnp.ones((4, 8), jnp.float32)
+    fn = lambda a: constrain(a, ("batch", "embed"))      # noqa: E731
+    # The constraint must appear in the traced program inside the scope
+    # (on one device the eager op returns its input, so the jaxpr is the
+    # device-count-independent witness) — and stay absent outside it.
+    with mesh:
+        assert "sharding_constraint" in str(jax.make_jaxpr(fn)(x))
+        np.testing.assert_array_equal(np.asarray(fn(x)), np.asarray(x))
+    assert "sharding_constraint" not in str(jax.make_jaxpr(fn)(x))
+
+
+def test_ambient_mesh_probe_uses_supported_import():
+    """The probe must resolve thread-local mesh state through a path that
+    actually exists on this jax — and see the active mesh."""
+    from repro.sharding.activation import _ambient_mesh
+
+    assert _ambient_mesh() is None
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    with mesh:
+        assert _ambient_mesh() is mesh
