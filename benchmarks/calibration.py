@@ -28,7 +28,7 @@ from typing import Dict
 import jax
 import numpy as np
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table
 from repro.config import JaladConfig, get_config
 from repro.core import predictor as pred
 from repro.core.predictor import build_tables, build_tables_reference
@@ -168,6 +168,4 @@ def run(quick: bool = True) -> Dict:
             "speedup_x": t_cold_start / t_hit_start,
         },
     }
-    path = save_result("calibration", results)
-    print(f"wrote {path}")
     return results

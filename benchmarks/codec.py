@@ -30,7 +30,7 @@ from typing import Dict
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table
 from repro.codec import get_codec, list_codecs
 from repro.kernels.quantize import ops
 
@@ -197,6 +197,4 @@ def run(quick: bool = True) -> Dict:
         f"per-tensor throughput, got {bp:.2f}x"
     )
 
-    path = save_result("codec", results)
-    print(f"wrote {path}")
     return results

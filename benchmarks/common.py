@@ -34,14 +34,6 @@ BITS_FULL = (2, 3, 4, 5, 6, 8)
 BITS_QUICK = (2, 4, 8)
 
 
-def save_result(name: str, payload: Dict) -> str:
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"{name}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, default=float)
-    return path
-
-
 def flatten_metrics(payload: Dict, prefix: str = "") -> Dict[str, float]:
     """Dotted-key flatten of a benchmark payload, keeping only scalar
     numbers — the machine-readable slice of an arbitrary ``run()`` dict."""
@@ -59,12 +51,13 @@ def flatten_metrics(payload: Dict, prefix: str = "") -> Dict[str, float]:
 
 def record_bench(name: str, metrics: Dict[str, float], *,
                  quick: bool) -> str:
-    """Append one run to the perf trajectory ``results/BENCH_<name>.json``.
-
-    Unlike ``save_result`` (a snapshot, overwritten per run) the BENCH
-    file accumulates: every driver invocation appends a row, so speedup
-    ratios / throughput regressions are diffable across commits. Uniform
-    schema per run: ``{"quick", "n_devices", "metrics"}``."""
+    """Append one run to the perf trajectory ``results/BENCH_<name>.json``
+    — the ONE machine-readable place benchmark numbers land (modules no
+    longer write their own ``results/<name>.json`` snapshots; the driver
+    routes every payload through here). The file accumulates: each driver
+    invocation appends a row, so speedup ratios / throughput regressions
+    are diffable across commits. Uniform schema per run: ``{"quick",
+    "n_devices", "metrics"}``."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
     doc = {"name": name, "schema": 1, "runs": []}

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import CNN_MODELS, fmt_table, save_result
+from benchmarks.common import CNN_MODELS, fmt_table
 from repro.config import get_config
 from repro.models import cnn as cnn_lib
 from repro.models.api import build_model
@@ -34,7 +34,6 @@ def run(quick: bool = True) -> dict:
     # early layers" (ResNet). Validate qualitatively: amplification > 1 in
     # early layers for every model.
     assert all(v["max_amplification"] > 1.0 for v in out.values())
-    save_result("fig2_amplification", out)
     return out
 
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import cnn_setup, fmt_table, save_result
+from benchmarks.common import cnn_setup, fmt_table
 from repro.core import compression as comp
 from repro.data.synthetic import make_batch
 
@@ -33,7 +33,6 @@ def run(quick: bool = True) -> dict:
         for ci in range(len(tables.bits_choices))
     )
     assert best >= 10.0, f"expected >=10x somewhere, best {best:.1f}x"
-    save_result("fig3_compression", out)
     return out
 
 

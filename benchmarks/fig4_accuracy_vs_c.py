@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table
 from repro.config import TrainConfig, get_config
 from repro.core.predictor import build_tables
 from repro.data.synthetic import ImageStream
@@ -62,7 +62,6 @@ def run(quick: bool = True) -> dict:
             assert d <= 0.10, f"c={b} drop {d:.3f} > 10%"
     # And the curve is (weakly) improving with bits.
     assert drops[0] >= drops[-1] - 1e-6
-    save_result("fig4_accuracy_vs_c", out)
     return out
 
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table
 from repro.config import get_config
 from repro.core.predictor import build_tables
 from repro.data.synthetic import make_batch
@@ -46,7 +46,6 @@ def run(quick: bool = True) -> dict:
     ))
     # Paper: "results of different epochs are highly overlapped".
     assert out["size_rel_spread_median"] < 0.1
-    save_result("fig5_stability", out)
     return out
 
 

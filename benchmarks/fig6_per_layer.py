@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import cnn_setup, fmt_table, save_result
+from benchmarks.common import cnn_setup, fmt_table
 
 
 def run(quick: bool = True) -> dict:
@@ -26,7 +26,6 @@ def run(quick: bool = True) -> dict:
         assert drops[-1] <= 0.05
     print("\nFig. 6 — per-point accuracy drop at c=8")
     print(fmt_table(rows, ["model", "mean", "max", "last point"]))
-    save_result("fig6_per_layer", out)
     return out
 
 

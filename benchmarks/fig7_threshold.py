@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import cnn_setup, fmt_table, save_result
+from benchmarks.common import cnn_setup, fmt_table
 from repro.config import EDGE_TX2, JaladConfig
 from repro.core.decoupler import JaladEngine
 from repro.core.latency import PNG_RATIO
@@ -36,7 +36,6 @@ def run(quick: bool = True) -> dict:
     # Monotone: a looser budget can never be slower.
     lats = out["latency"]
     assert all(lats[i + 1] <= lats[i] + 1e-9 for i in range(len(lats) - 1))
-    save_result("fig7_threshold", out)
     return out
 
 

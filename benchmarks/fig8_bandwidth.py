@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import cnn_setup, fmt_table, save_result
+from benchmarks.common import cnn_setup, fmt_table
 from repro.config import EDGE_TX2, JaladConfig
 from repro.core.decoupler import JaladEngine
 from repro.core.latency import PNG_RATIO
@@ -46,7 +46,6 @@ def run(quick: bool = True) -> dict:
     assert j.max() / j.min() < 0.7 * (p.max() / p.min())
     # JALAD never loses to the baselines.
     assert (j <= p + 1e-9).all()
-    save_result("fig8_bandwidth", out)
     return out
 
 

@@ -56,7 +56,7 @@ from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table
 from repro.config import JaladConfig, get_config
 from repro.config.types import EDGE_TK1, EDGE_TX2, DeviceProfile
 from repro.core.decoupler import DecoupledPlan
@@ -435,8 +435,6 @@ def run(quick: bool = True) -> Dict:
     assert fleet.makespan_s < fleet.synchronous_time_s()
     assert fleet.batched_launches() >= 1
 
-    path = save_result("fleet", results)
-    print(f"wrote {path}")
     return results
 
 

@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table
 from repro.core.ilp import ILPProblem, solve_branch_and_bound, solve_enumeration
 
 
@@ -32,7 +32,6 @@ def run(quick: bool = True) -> dict:
     print("\nILP solve time (paper: 1.77 ms at ~N*C scale)")
     print(fmt_table(rows, ["N x C", "enumeration", "branch&bound"]))
     assert out["50x16"]["enumeration_ms"] < 10.0
-    save_result("ilp_solve_time", out)
     return out
 
 

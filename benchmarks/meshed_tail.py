@@ -37,7 +37,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table
 from repro.config import JaladConfig, get_config
 from repro.config.types import EDGE_TK1, EDGE_TX2, TPU_V5E_ICI_BW
 from repro.core.latency import CloudMeshModel
@@ -193,7 +193,6 @@ def run(quick: bool = True):
     e2e, srv = _e2e_gate(quick, make_host_mesh(model_axis=4))
     out.update(e2e)
     out.update(_planner_report(srv, make_host_mesh(model_axis=8)))
-    save_result("meshed_tail", out)
     return out
 
 

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import fmt_table, save_result
+from benchmarks.common import fmt_table
 from repro.config import JaladConfig, get_config
 from repro.data.synthetic import make_batch
 from repro.kernels.quantize import ops
@@ -124,6 +124,4 @@ def run(quick: bool = True) -> Dict:
     print(fmt_table(rows, ["model", "bandwidth", "reqs", "synchronous",
                            "pipelined", "speedup"]))
     payload = {"fused_codec": codec, "configs": configs}
-    path = save_result("pipeline_serving", payload)
-    print(f"wrote {path}")
     return payload

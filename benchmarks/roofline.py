@@ -16,7 +16,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from benchmarks.common import RESULTS_DIR, fmt_table, save_result
+from benchmarks.common import RESULTS_DIR, fmt_table
 from repro.config import (
     INPUT_SHAPES,
     TPU_V5E,
@@ -102,7 +102,6 @@ def run(quick: bool = True) -> dict:
     n_dryrun = sum(1 for v in out.values() if v.get("source") != "analytic")
     print(f"\n{n_dryrun}/40 rows from compiled dry-run artifacts, "
           f"{40 - n_dryrun} analytic-only")
-    save_result("roofline", out)
     return out
 
 

@@ -27,6 +27,7 @@ MODULES = [
     "codec",
     "fleet",
     "pipeline_serving",
+    "token_streaming",
     "meshed_tail",
     "roofline",
 ]

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import CNN_MODELS, cnn_setup, fmt_table, save_result
+from benchmarks.common import CNN_MODELS, cnn_setup, fmt_table
 from repro.config import EDGE_TX2, JaladConfig
 from repro.core.decoupler import JaladEngine
 from repro.core.latency import PNG_RATIO
@@ -53,7 +53,6 @@ def run(quick: bool = True) -> dict:
             assert v["png2cloud_x"] >= 1.0, k
     best = max(v["png2cloud_x"] for k, v in out.items() if "300KBps" in k)
     assert best >= 2.0, f"expected multi-x speedup at 300KBps, best {best:.2f}"
-    save_result("table2_speedup", out)
     return out
 
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import CNN_MODELS, fmt_table, save_result
+from benchmarks.common import CNN_MODELS, fmt_table
 from repro.config import EDGE_TK1, EDGE_TX2
 from benchmarks.table2_speedup import speedups
 
@@ -35,7 +35,6 @@ def run(quick: bool = True) -> dict:
     # K1 never does worse than cloud-only (falls back to upload).
     for arch in CNN_MODELS:
         assert out[arch]["tk1"]["png_x"] >= 1.0 - 1e-9
-    save_result("table3_edge_power", out)
     return out
 
 

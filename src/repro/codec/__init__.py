@@ -14,6 +14,7 @@ placement of each stage.
 """
 from repro.codec.base import (
     BoundaryCodec,
+    StreamHeader,
     WireBlob,
     get_codec,
     list_codecs,
@@ -25,6 +26,7 @@ from repro.codec.perchannel import PerChannelCodec
 
 __all__ = [
     "BoundaryCodec",
+    "StreamHeader",
     "WireBlob",
     "get_codec",
     "list_codecs",

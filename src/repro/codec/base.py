@@ -68,6 +68,39 @@ class WireBlob:
     def nbytes(self) -> int:
         return len(self.payload) + self.header_bytes
 
+    @property
+    def stream_nbytes(self) -> int:
+        """Wire cost of this blob inside an open token stream.
+
+        A :class:`StreamHeader` negotiated at session start pins the bit
+        width (and shape) for every subsequent frame, so the per-blob
+        1-byte bits tag is amortized away; the affine range header still
+        ships per token because min/max are data dependent.
+        """
+        return self.nbytes - 1
+
+
+@dataclass(frozen=True)
+class StreamHeader:
+    """Per-session reusable header for token-level streaming.
+
+    One-shot serving ships ``(bits, ranges)`` with every boundary tensor.
+    Token streaming sends thousands of small frames whose codec, bit
+    width and shape never change mid-session, so those fields move into a
+    single header exchanged when the session opens; each frame then costs
+    only :attr:`WireBlob.stream_nbytes`. The codec id is 1 byte (a
+    registry index agreed at plan time), bits is 1 byte, and the shape is
+    a 1-byte rank plus 4 bytes per dim.
+    """
+
+    codec: str
+    bits: int
+    shape: Tuple[int, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return 3 + 4 * len(self.shape)
+
 
 class BoundaryCodec(ABC):
     """One wire format for the edge->cloud boundary tensor.
@@ -113,6 +146,11 @@ class BoundaryCodec(ABC):
         launch when the blobs are stackable, bit-identical per-tensor
         results)."""
         return [self.decode(b, out_dtype) for b in blobs]
+
+    def open_stream(self, shape: Tuple[int, ...], bits: int) -> StreamHeader:
+        """Negotiate the per-session header for a token stream whose
+        frames all share ``shape`` and ``bits`` (see :class:`StreamHeader`)."""
+        return StreamHeader(codec=self.name, bits=bits, shape=tuple(shape))
 
     # ------------------------------------------------------------ hooks
     def transfer_size_bytes(self, x: jnp.ndarray, bits: int) -> int:

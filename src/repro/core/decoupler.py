@@ -20,7 +20,7 @@ if TYPE_CHECKING:
 from repro.config.types import JaladConfig
 from repro.core.ilp import ILPProblem, solve
 from repro.core.latency import LatencyModel
-from repro.core.planner import PlanSpace
+from repro.core.planner import PlanSpace, StreamPlanTerms
 from repro.core.predictor import PredictorTables
 from repro.core.quantization import quantize_dequantize
 from repro.models.api import Model
@@ -162,6 +162,17 @@ class DecoupledRunner:
         logits = self.cloud_step(blob, extras)
         return logits, blob.nbytes
 
+    def stream_session(self, serve_cfg, cloud_kv_bits: int = 8):
+        """Token-level serving under this runner's plan: a
+        :class:`~repro.serving.streaming.TokenStreamSession` whose decode
+        loop runs head-on-edge / boundary-through-this-codec /
+        tail-on-cloud every token (with int8 cloud KV by default)."""
+        from repro.serving.streaming import TokenStreamSession
+
+        return TokenStreamSession(self.model, self.params, serve_cfg,
+                                  plan=self.plan,
+                                  cloud_kv_bits=cloud_kv_bits)
+
     def run_simulated(self, batch):
         """jit-friendly end-to-end path: the codec's value transform
         in-graph (no host serialization round trip). Numerically identical
@@ -213,6 +224,8 @@ class JaladEngine:
     point_indices: Optional[List[int]] = None   # tables row -> model point
     _plan_space: Optional[PlanSpace] = field(
         default=None, repr=False, compare=False)
+    _stream_terms: Optional[StreamPlanTerms] = field(
+        default=None, repr=False, compare=False)
 
     @property
     def plan_space(self) -> PlanSpace:
@@ -248,6 +261,43 @@ class JaladEngine:
             return space.cloud_only_plan(bw)
         return space.plan_from_solution(sol)
 
+    @property
+    def stream_terms(self) -> StreamPlanTerms:
+        """The per-token steady-state extension of this engine's
+        PlanSpace (built lazily, cached). The calibration unit is one
+        batch of ``input_bytes / 4`` tokens (LM inputs are int32 token
+        ids, so ``input_bytes = B * S * 4``), which converts the
+        per-batch FMAC time vectors into per-token stage times."""
+        if self._stream_terms is None:
+            if self.model.cfg.family == "cnn":
+                raise ValueError(
+                    "token streaming is autoregressive decode; CNNs "
+                    "decouple per request (use decide/make_runner)")
+            self._stream_terms = self.plan_space.with_streaming(
+                self.model.cfg.d_model,
+                self.latency.input_bytes / 4.0,
+            )
+        return self._stream_terms
+
+    def decide_streaming(self, bandwidth: Optional[float] = None,
+                         expected_tokens: float = 128.0,
+                         method: str = "planner") -> DecoupledPlan:
+        """Decide (point, bits, codec) for token-level streaming: the
+        one-shot objective plus ``expected_tokens`` times the per-token
+        steady-state term (edge step + stream-frame bytes / BW + cloud
+        step). ``method`` mirrors :meth:`decide` — ``"planner"`` is the
+        fused argmin, ``"enumeration"``/``"bnb"`` the ILP oracles over
+        bitwise-identical streaming costs."""
+        bw = bandwidth if bandwidth is not None else \
+            self.cfg.bandwidth_bytes_per_s
+        terms = self.stream_terms
+        if method == "planner":
+            return terms.decide(bw, expected_tokens)
+        sol = solve(terms.ilp_problem(bw, expected_tokens), method)
+        if sol is None:
+            return terms.cloud_only_plan(bw, expected_tokens)
+        return terms.plan_from_solution(sol)
+
     def for_edge(self, edge_profile) -> "JaladEngine":
         """A per-device engine sharing this engine's tables, cloud profile
         and PlanSpace precomputation — only the edge-time vector differs.
@@ -257,7 +307,8 @@ class JaladEngine:
         lat = LatencyModel(self.latency.fmacs_per_point, edge_profile,
                            self.latency.cloud, self.latency.input_bytes)
         return _dc.replace(self, latency=lat,
-                           _plan_space=self.plan_space.with_edge(edge_profile))
+                           _plan_space=self.plan_space.with_edge(edge_profile),
+                           _stream_terms=None)
 
     def with_cloud_mesh(self, mesh_model) -> "JaladEngine":
         """An engine whose PlanSpace prices the cloud side under a
@@ -268,7 +319,8 @@ class JaladEngine:
         import dataclasses as _dc
 
         return _dc.replace(
-            self, _plan_space=self.plan_space.with_cloud_mesh(mesh_model))
+            self, _plan_space=self.plan_space.with_cloud_mesh(mesh_model),
+            _stream_terms=None)
 
     def make_runner(self, params, plan: DecoupledPlan,
                     mesh_worker: Optional[Any] = None) -> DecoupledRunner:

@@ -50,26 +50,43 @@ def count_launches():
         box.count = k.LAUNCH_COUNT - start
 
 
-def _tile_rows(n_elem: int, block_m: int) -> int:
+def _sublane(bits: int) -> int:
+    """Sublane multiple of the (M, 128) tiling for a given code width.
+
+    The row count must satisfy the deepest TPU min-tile among the dtypes
+    a launch touches: the f32 input needs (8, 128), uint8/int8 codes need
+    (32, 128), and uint16 codes (bits > 8) need only (16, 128) — so
+    wide-code tensors (the per-token streaming boundary at high rates)
+    pad to half the rows. ``bits == 0`` (callers that don't know the
+    width) keeps the conservative 32."""
+    return 16 if bits > 8 else 32
+
+
+def _tile_rows(n_elem: int, block_m: int, bits: int = 0) -> int:
     """Padded row count of the (M, 128) tiling for ``n_elem`` elements:
-    a multiple of 32 (the deepest sublane requirement among the dtypes
-    the kernels touch), then a multiple of the block that actually
-    launches (``min(block_m, rows)``) — so small boundary tensors get a
-    single right-sized block instead of padding out to ``block_m`` rows.
-    Zero-element inputs still map to one well-formed all-padding block."""
+    a multiple of the sublane requirement of this code width (see
+    ``_sublane``), then a multiple of the block that actually launches
+    (``min(block_m, rows)``) — so small boundary tensors get a single
+    right-sized block instead of padding out to ``block_m`` rows.
+    Zero-element inputs still map to one well-formed all-padding block.
+    Encode and decode must agree on ``bits`` — the wire payload is
+    trimmed to the exact element count, but the re-padded tile grid the
+    decoder rebuilds has to match the one the encoder emitted."""
+    sub = _sublane(bits)
     rows = max((n_elem + LANES - 1) // LANES, 1)
-    rows = (rows + 31) // 32 * 32
+    rows = (rows + sub - 1) // sub * sub
     bm = min(block_m, rows)
     return (rows + bm - 1) // bm * bm
 
 
-def _to_tiles(x: jnp.ndarray, block_m: int) -> Tuple[jnp.ndarray, int]:
+def _to_tiles(x: jnp.ndarray, block_m: int, bits: int = 0
+              ) -> Tuple[jnp.ndarray, int]:
     """Flatten to (M, 128) and pad M to a block multiple. Returns the padded
     2-D array and the original element count."""
     n_elem = x.size
     flat = x.reshape(-1)
     cols = LANES
-    rows_pad = _tile_rows(n_elem, block_m)
+    rows_pad = _tile_rows(n_elem, block_m, bits)
     pad = rows_pad * cols - n_elem
     # Pad with the first element so padding never changes min/max (zeros
     # for an empty input, which has no min/max to preserve).
@@ -78,14 +95,14 @@ def _to_tiles(x: jnp.ndarray, block_m: int) -> Tuple[jnp.ndarray, int]:
     return flat.reshape(rows_pad, cols), n_elem
 
 
-def _to_tiles_batch(xb: jnp.ndarray, block_m: int
+def _to_tiles_batch(xb: jnp.ndarray, block_m: int, bits: int = 0
                     ) -> Tuple[jnp.ndarray, int]:
     """Batched ``_to_tiles``: (B, *shape) -> (B, M, 128), padding each
     sample with its own first element (per-sample min/max preserved)."""
     bsz = xb.shape[0]
     n_elem = int(np.prod(xb.shape[1:])) if xb.ndim > 1 else 1
     flat = xb.reshape(bsz, -1)
-    rows_pad = _tile_rows(n_elem, block_m)
+    rows_pad = _tile_rows(n_elem, block_m, bits)
     pad = rows_pad * LANES - n_elem
     if n_elem:
         fill = jnp.broadcast_to(flat[:, :1], (bsz, pad))
@@ -103,7 +120,7 @@ def _to_tiles_batch(xb: jnp.ndarray, block_m: int
 def quantize_pack_impl(x, bits, block_m=k.DEFAULT_BLOCK_M, interpret=None):
     if interpret is None:
         interpret = _should_interpret()
-    x2d, _ = _to_tiles(x, block_m)
+    x2d, _ = _to_tiles(x, block_m, bits)
     bm = min(block_m, x2d.shape[0])
     codes, mn, mx = k.fused_encode_blocks(x2d[None], bits, bm,
                                           interpret=interpret)
@@ -132,7 +149,7 @@ def quantize_pack_batch_impl(xb, bits, block_m=k.DEFAULT_BLOCK_M,
                              interpret=None):
     if interpret is None:
         interpret = _should_interpret()
-    x3d, _ = _to_tiles_batch(xb, block_m)
+    x3d, _ = _to_tiles_batch(xb, block_m, bits)
     bm = min(block_m, x3d.shape[1])
     return k.fused_encode_blocks(x3d, bits, bm, interpret=interpret)
 
@@ -173,7 +190,7 @@ def quantize_pack_threelaunch_impl(x, bits, block_m=k.DEFAULT_BLOCK_M,
     fused single-launch path."""
     if interpret is None:
         interpret = _should_interpret()
-    x2d, _ = _to_tiles(x, block_m)
+    x2d, _ = _to_tiles(x, block_m, bits)
     bm = min(block_m, x2d.shape[0])
     mn, mx = k.minmax_blocks(x2d, bm, interpret=interpret)
     codes2d = k.quantize_blocks(x2d, mn, mx, bits, bm, interpret=interpret)
@@ -257,7 +274,7 @@ def dequantize_codes(
     dequant+cast ``pallas_call``."""
     if interpret is None:
         interpret = _should_interpret()
-    q2d, _ = _to_tiles(codes.astype(k.code_dtype(bits)), block_m)
+    q2d, _ = _to_tiles(codes.astype(k.code_dtype(bits)), block_m, bits)
     bm = min(block_m, q2d.shape[0])
     x3d = k.fused_decode_blocks(
         q2d[None],
@@ -274,7 +291,7 @@ def _wire_tiles(codes_flat: jnp.ndarray, n_elem: int, bits: int,
     """Re-pad flat wire codes (per sample) to the 2-D tile layout
     ``quantize_pack`` emitted."""
     cols = LANES // 2 if bits <= 4 else LANES
-    rows_pad = _tile_rows(n_elem, block_m)
+    rows_pad = _tile_rows(n_elem, block_m, bits)
     lead = codes_flat.shape[:-1]
     flat = codes_flat.reshape(lead + (-1,))
     pad = [(0, 0)] * len(lead) + [(0, rows_pad * cols - flat.shape[-1])]

@@ -246,6 +246,51 @@ class Model:
                                        start=point + 1)
         return _transformer_tail(self, params, boundary, point, extras)
 
+    # -------------------------------------- token streaming (JALAD decode)
+    def _check_token_split(self) -> None:
+        if self.cfg.family == "cnn":
+            raise ValueError("token streaming is autoregressive decode; "
+                             "CNNs decouple per request (run_head/run_tail)")
+        tf_lib.check_streamable(self.cfg)
+
+    def prefill_head(self, params, batch, cache_len: int, point: int
+                     ) -> Tuple[jnp.ndarray, List[Any]]:
+        """Edge prefill of blocks [0, point]; returns (boundary, caches)."""
+        self._check_token_split()
+        return tf_lib.prefill_head(params, self.cfg, batch, cache_len, point)
+
+    def prefill_tail(self, params, boundary, cache_len: int, point: int
+                     ) -> Tuple[jnp.ndarray, List[Any]]:
+        """Cloud prefill resuming at block point+1 from the decoded
+        boundary; returns (logits, caches)."""
+        self._check_token_split()
+        return tf_lib.prefill_tail(params, self.cfg, boundary, cache_len,
+                                   point)
+
+    def decode_head(self, params, tokens, pos, head_caches, point: int,
+                    seq_hint: int) -> Tuple[jnp.ndarray, List[Any]]:
+        """Edge half of one decode step; returns (boundary (B,1,d),
+        new head caches)."""
+        return tf_lib.decode_head(params, self.cfg, tokens, pos, head_caches,
+                                  point, seq_hint)
+
+    def decode_tail(self, params, boundary, pos, tail_caches, point: int,
+                    seq_hint: int) -> Tuple[jnp.ndarray, List[Any]]:
+        """Cloud half of one decode step; returns (logits (B,1,V),
+        new tail caches)."""
+        return tf_lib.decode_tail(params, self.cfg, boundary, pos,
+                                  tail_caches, point, seq_hint)
+
+    def init_head_caches(self, batch: int, cache_len: int, point: int
+                         ) -> List[Any]:
+        self._check_token_split()
+        return tf_lib.init_head_caches(self.cfg, batch, cache_len, point)
+
+    def init_tail_caches(self, batch: int, cache_len: int, point: int
+                         ) -> List[Any]:
+        self._check_token_split()
+        return tf_lib.init_tail_caches(self.cfg, batch, cache_len, point)
+
     # --------------------------------------------------- latency model IO
     def per_point_fmacs(self, batch: int, seq_len: int = 0) -> List[float]:
         """FMACs of each decoupling segment (layer i's own compute)."""
@@ -350,13 +395,7 @@ class Model:
 
 
 def _point_to_segment(cfg: ModelConfig, point: int) -> Tuple[int, int]:
-    plan = tf_lib.segment_plan(cfg)
-    acc = 0
-    for si, seg in enumerate(plan):
-        if point < acc + seg.count:
-            return si, point - acc
-        acc += seg.count
-    raise IndexError(point)
+    return tf_lib.point_to_segment(cfg, point)
 
 
 def _slice_seg(seg_params, lo: int, hi: int):

@@ -343,6 +343,266 @@ def _decode_seq_hint(cfg: ModelConfig, caches) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Token-level head/tail split (streaming decode across the JALAD cut)
+# ---------------------------------------------------------------------------
+#
+# The one-shot decoupling in repro.models.api (_transformer_head/_tail) cuts
+# a single forward pass. Token streaming cuts the *decode loop*: every step
+# the edge runs blocks [0, point], ships the (B, 1, d) boundary row, and the
+# cloud resumes at block point+1 — each side holding only its own KV/state
+# caches. The functions below mirror forward_seq / decode_step block for
+# block so the split loop is bit-identical to the unsplit one up to the
+# boundary codec's value transform.
+
+
+def point_to_segment(cfg: ModelConfig, point: int) -> Tuple[int, int]:
+    """Map a global decoupling point to (segment index, offset in segment)."""
+    acc = 0
+    for si, seg in enumerate(segment_plan(cfg)):
+        if point < acc + seg.count:
+            return si, point - acc
+        acc += seg.count
+    raise IndexError(point)
+
+
+def check_streamable(cfg: ModelConfig) -> None:
+    """Families whose decode needs per-token extras beyond the boundary row
+    (encoder output, vision positions) cannot stream over the cut."""
+    if cfg.is_encdec or cfg.family == "vlm":
+        raise ValueError(
+            "token streaming ships only the boundary hidden row per token; "
+            f"family {cfg.family!r} needs per-token extras (encoder output / "
+            "vision positions) that are not part of the streaming wire format"
+        )
+
+
+def _head_segments(cfg: ModelConfig, point: int) -> List[Tuple[int, int]]:
+    """(segment index, layer count) pairs the head runs, in order. The cut
+    segment runs ``off + 1`` layers (a shared 'A' cut runs whole: count 1)."""
+    plan = segment_plan(cfg)
+    si, off = point_to_segment(cfg, point)
+    return [(sj, plan[sj].count if sj < si else off + 1)
+            for sj in range(si + 1)]
+
+
+def _tail_segments(cfg: ModelConfig, point: int) -> List[Tuple[int, int]]:
+    """(segment index, start layer) pairs the tail resumes at. The cut
+    segment resumes at ``off + 1``; segments the head consumed entirely
+    (including a shared cut block) are skipped."""
+    plan = segment_plan(cfg)
+    si, off = point_to_segment(cfg, point)
+    out: List[Tuple[int, int]] = []
+    for sj in range(si, len(plan)):
+        seg = plan[sj]
+        lo = off + 1 if sj == si else 0
+        if (seg.shared and sj == si) or lo >= seg.count:
+            continue
+        out.append((sj, lo))
+    return out
+
+
+def _sliced_cache_list(cfg: ModelConfig, batch: int, cache_len: int,
+                       pairs: List[Tuple[int, int]], head: bool) -> List[Any]:
+    plan = segment_plan(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    caches: List[Any] = []
+    for sj, k in pairs:
+        seg = plan[sj]
+        count = k if head else seg.count - k
+        one = blk.init_block_cache(seg.kind, cfg, batch, cache_len, dtype, 0)
+        if seg.shared:
+            caches.append(one)
+        else:
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (count,) + a.shape
+                ).copy() if hasattr(a, "shape") else a, one))
+    return caches
+
+
+def init_head_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                     point: int) -> List[Any]:
+    """Zero edge-side caches: blocks [0, point] only."""
+    check_streamable(cfg)
+    return _sliced_cache_list(cfg, batch, cache_len,
+                              _head_segments(cfg, point), head=True)
+
+
+def init_tail_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                     point: int) -> List[Any]:
+    """Zero cloud-side caches: blocks [point+1, end). Built from the
+    cloud-side config, so ``cfg.kv_cache_bits == 8`` stores int8 codes +
+    per-(position, kv-head) float32 scales (see ``blocks._kv_cache_entry``)."""
+    check_streamable(cfg)
+    return _sliced_cache_list(cfg, batch, cache_len,
+                              _tail_segments(cfg, point), head=False)
+
+
+def _slice_layers(seg_params, lo: int, hi: int):
+    return jax.tree.map(lambda a: a[lo:hi], seg_params)
+
+
+def prefill_head(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                 cache_len: int, point: int
+                 ) -> Tuple[jnp.ndarray, List[Any]]:
+    """Edge prefill: run blocks [0, point] over the prompt, building only
+    the head's decode caches. Returns (boundary (B, S, d), head_caches)."""
+    check_streamable(cfg)
+    plan = segment_plan(cfg)
+    x, positions, pos3d = embed_inputs(params, cfg, batch)
+    x = constrain(x, _HID)
+    window = effective_window(cfg, x.shape[1])
+    ctx = blk.SeqContext(positions, pos3d, window, cache_len, None)
+
+    caches: List[Any] = []
+    for sj, count in _head_segments(cfg, point):
+        seg = plan[sj]
+        if seg.shared:
+            x, _, cache = blk.block_apply_seq(
+                "A", params["shared_attn"], x, ctx, cfg
+            )
+            caches.append(cache)
+            continue
+        seg_params = _slice_layers(params["segments"][sj], 0, count)
+
+        def body(carry, layer_params, kind=seg.kind):
+            h, = carry
+            h, _, cache = blk.block_apply_seq(kind, layer_params, h, ctx, cfg)
+            return (constrain(h, _HID),), cache
+
+        (x,), cache_stack = jax.lax.scan(
+            body, (x,), seg_params,
+            unroll=count if cfg.scan_unroll else 1,
+        )
+        caches.append(cache_stack)
+    return x, caches
+
+
+def prefill_tail(params, cfg: ModelConfig, boundary: jnp.ndarray,
+                 cache_len: int, point: int
+                 ) -> Tuple[jnp.ndarray, List[Any]]:
+    """Cloud prefill: resume at block point+1 from the decoded boundary,
+    building the tail's decode caches. Positions are rebuilt from the
+    boundary shape (decoder-only streams: plain arange). Returns
+    (logits (B, S, V), tail_caches)."""
+    check_streamable(cfg)
+    plan = segment_plan(cfg)
+    b, s = boundary.shape[0], boundary.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    window = effective_window(cfg, s)
+    ctx = blk.SeqContext(positions, None, window, cache_len, None)
+    x = constrain(boundary, _HID)
+
+    caches: List[Any] = []
+    for sj, lo in _tail_segments(cfg, point):
+        seg = plan[sj]
+        if seg.shared:
+            x, _, cache = blk.block_apply_seq(
+                "A", params["shared_attn"], x, ctx, cfg
+            )
+            caches.append(cache)
+            continue
+        seg_params = _slice_layers(params["segments"][sj], lo, seg.count)
+
+        def body(carry, layer_params, kind=seg.kind):
+            h, = carry
+            h, _, cache = blk.block_apply_seq(kind, layer_params, h, ctx, cfg)
+            return (constrain(h, _HID),), cache
+
+        (x,), cache_stack = jax.lax.scan(
+            body, (x,), seg_params,
+            unroll=(seg.count - lo) if cfg.scan_unroll else 1,
+        )
+        caches.append(cache_stack)
+    logits = _logits(params, cfg, x)
+    return logits, caches
+
+
+def decode_head(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                pos: jnp.ndarray, head_caches: List[Any], point: int,
+                seq_hint: int) -> Tuple[jnp.ndarray, List[Any]]:
+    """Edge half of one decode step: blocks [0, point] on one new token.
+    ``seq_hint`` is the nominal sequence length (the shared cache length),
+    passed explicitly because the head's caches may not include an
+    attention cache to recover it from. Returns (boundary (B, 1, d),
+    new head caches)."""
+    plan = segment_plan(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype), _HID)
+    window = effective_window(cfg, seq_hint)
+    pos3d = None
+    if cfg.rope_kind == "mrope":
+        p = jnp.broadcast_to(pos, (x.shape[0], 1))
+        pos3d = jnp.stack([p, p, p], axis=-1)
+    ctx = blk.DecodeContext(pos, window, pos3d)
+
+    new_caches: List[Any] = []
+    for (sj, count), cache in zip(_head_segments(cfg, point), head_caches):
+        seg = plan[sj]
+        if seg.shared:
+            x, new_c = blk.block_apply_decode(
+                "A", params["shared_attn"], x, cache, ctx, cfg
+            )
+            new_caches.append(new_c)
+            continue
+        seg_params = _slice_layers(params["segments"][sj], 0, count)
+
+        def body(h, xs, kind=seg.kind):
+            layer_params, layer_cache = xs
+            h, new_c = blk.block_apply_decode(kind, layer_params, h,
+                                              layer_cache, ctx, cfg)
+            return constrain(h, _HID), new_c
+
+        x, cache_stack = jax.lax.scan(
+            body, x, (seg_params, cache),
+            unroll=count if cfg.scan_unroll else 1,
+        )
+        new_caches.append(cache_stack)
+    return x, new_caches
+
+
+def decode_tail(params, cfg: ModelConfig, boundary: jnp.ndarray,
+                pos: jnp.ndarray, tail_caches: List[Any], point: int,
+                seq_hint: int) -> Tuple[jnp.ndarray, List[Any]]:
+    """Cloud half of one decode step: resume at block point+1 from the
+    decoded (B, 1, d) boundary row. Returns (logits (B, 1, V), new tail
+    caches)."""
+    plan = segment_plan(cfg)
+    x = constrain(boundary, _HID)
+    window = effective_window(cfg, seq_hint)
+    pos3d = None
+    if cfg.rope_kind == "mrope":
+        p = jnp.broadcast_to(pos, (x.shape[0], 1))
+        pos3d = jnp.stack([p, p, p], axis=-1)
+    ctx = blk.DecodeContext(pos, window, pos3d)
+
+    new_caches: List[Any] = []
+    for (sj, lo), cache in zip(_tail_segments(cfg, point), tail_caches):
+        seg = plan[sj]
+        if seg.shared:
+            x, new_c = blk.block_apply_decode(
+                "A", params["shared_attn"], x, cache, ctx, cfg
+            )
+            new_caches.append(new_c)
+            continue
+        seg_params = _slice_layers(params["segments"][sj], lo, seg.count)
+
+        def body(h, xs, kind=seg.kind):
+            layer_params, layer_cache = xs
+            h, new_c = blk.block_apply_decode(kind, layer_params, h,
+                                              layer_cache, ctx, cfg)
+            return constrain(h, _HID), new_c
+
+        x, cache_stack = jax.lax.scan(
+            body, x, (seg_params, cache),
+            unroll=(seg.count - lo) if cfg.scan_unroll else 1,
+        )
+        new_caches.append(cache_stack)
+    logits = _logits(params, cfg, x)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
 # Loss
 # ---------------------------------------------------------------------------
 

@@ -4,7 +4,9 @@ from repro.serving.edge_cloud import (
     EdgeCloudServer,
     LatencyBreakdown,
     RunnerCache,
+    Servable,
 )
+from repro.serving.streaming import TokenStreamSession, step_stream_group
 from repro.serving.pipeline import (
     PipelinedEdgeCloudServer,
     PipelineRequest,
@@ -45,5 +47,8 @@ __all__ = [
     "aot_tail_report",
     "PipelinedEdgeCloudServer",
     "PipelineRequest",
+    "Servable",
     "StageTimeline",
+    "TokenStreamSession",
+    "step_stream_group",
 ]

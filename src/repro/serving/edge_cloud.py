@@ -17,7 +17,10 @@ latency by adaptively changing the decoupling strategy").
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+from typing import (
+    Any, Callable, Dict, Iterable, List, Optional, Protocol, Tuple,
+    runtime_checkable,
+)
 
 from repro.config.types import JaladConfig
 from repro.core.adaptation import AdaptationController
@@ -38,6 +41,20 @@ class LatencyBreakdown:
     @property
     def total_s(self) -> float:
         return self.edge_s + self.transfer_s + self.cloud_s
+
+
+@runtime_checkable
+class Servable(Protocol):
+    """Anything ``serve_trace`` can advance under one trace step: the
+    item prices and executes itself against the server. Streaming
+    sessions (:class:`~repro.serving.streaming.TokenStreamSession`)
+    implement this; plain batches don't and go through ``serve_batch``.
+    Structural — no registration, no isinstance chains on concrete
+    session types."""
+
+    def serve(self, server: "EdgeCloudServer",
+              bandwidth: float) -> "LatencyBreakdown":
+        ...
 
 
 @dataclass
@@ -112,6 +129,18 @@ class EdgeCloudServer:
     def _runner(self, plan: DecoupledPlan) -> DecoupledRunner:
         return self.runners.get(plan)
 
+    def record(self, bd: LatencyBreakdown) -> LatencyBreakdown:
+        """Account one served unit: feed the controller's bandwidth
+        estimator with the transfer observation, advance the simulated
+        clock, append to the log. Every serving path — including
+        :class:`Servable` items pricing themselves — funnels through
+        here."""
+        self.controller.observe_transfer(max(bd.bytes_sent, 1),
+                                         max(bd.transfer_s, 1e-9))
+        self.clock += bd.total_s
+        self.log.append(bd)
+        return bd
+
     def serve_batch(self, batch, bandwidth: float) -> Tuple[Any, LatencyBreakdown]:
         """Run one batch at the given true bandwidth; returns (logits,
         latency breakdown). Advances the simulated clock."""
@@ -134,11 +163,7 @@ class EdgeCloudServer:
             transfer_t = blob.nbytes / bandwidth
             bd = LatencyBreakdown(edge_t, transfer_t, cloud_t, blob.nbytes,
                                   plan.point, plan.bits, plan.codec)
-        # Feed the controller's bandwidth estimator with the observation.
-        self.controller.observe_transfer(max(bd.bytes_sent, 1),
-                                         max(bd.transfer_s, 1e-9))
-        self.clock += bd.total_s
-        self.log.append(bd)
+        self.record(bd)
         return logits, bd
 
     def serve_microbatch(self, batches: List[Any], bandwidth: float
@@ -160,20 +185,27 @@ class EdgeCloudServer:
             bd = LatencyBreakdown(edge_t, blob.nbytes / bandwidth, cloud_t,
                                   blob.nbytes, plan.point, plan.bits,
                                   plan.codec)
-            self.controller.observe_transfer(max(bd.bytes_sent, 1),
-                                             max(bd.transfer_s, 1e-9))
-            self.clock += bd.total_s
-            self.log.append(bd)
+            self.record(bd)
             out.append((logits, bd))
         return out
 
-    def serve_trace(self, batches: Iterable, bandwidth_trace: Iterable[float]
+    def serve_trace(self, items: Iterable[Any],
+                    bandwidth_trace: Iterable[float]
                     ) -> List[LatencyBreakdown]:
-        """Serve a stream of batches under a bandwidth trace (Fig. 8)."""
-        out = []
-        for batch, bw in zip(batches, bandwidth_trace):
-            _, bd = self.serve_batch(batch, bw)
-            out.append(bd)
+        """Serve a stream of trace items under a bandwidth trace
+        (Fig. 8). An item that implements the :class:`Servable` protocol
+        (e.g. a token-streaming session) advances itself for one trace
+        step; anything else is treated as a one-shot batch. Mixed
+        streams interleave freely — both paths record through
+        :meth:`record`, so the clock, the log and the bandwidth
+        estimator see one consistent sequence."""
+        out: List[LatencyBreakdown] = []
+        for item, bw in zip(items, bandwidth_trace):
+            serve = getattr(item, "serve", None)
+            if callable(serve):
+                out.append(serve(self, bw))
+            else:
+                out.append(self.serve_batch(item, bw)[1])
         return out
 
 

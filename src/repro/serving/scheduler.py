@@ -77,19 +77,9 @@ class ContinuousBatchingEngine:
                              "families; CNNs go through the edge-cloud "
                              "pipeline (repro.serving.pipeline)")
         n = self.cfg.max_batch
-        L = self.cfg.max_seq_len
-        self._prefill = jax.jit(
-            lambda p, b: self.model.prefill(p, b, L)
-        )
-        self._decode = jax.jit(
-            jax.vmap(self.model.decode_step, in_axes=(None, 0, 0, 0))
-        )
+        self._init_compute()
         self._select = jax.jit(self._batched_select)
         self._dummy_key = jax.random.key(self.cfg.seed)
-        one = self.model.init_caches(1, L, 0)
-        self._caches = jax.tree.map(
-            lambda a: jnp.zeros((n,) + a.shape, a.dtype), one
-        )
         self._pos = jnp.zeros((n,), jnp.int32)
         self._last = jnp.zeros((n, 1, 1), jnp.int32)
         self._slots: List[Optional[GenRequest]] = [None] * n
@@ -98,6 +88,26 @@ class ContinuousBatchingEngine:
         self.completed: List[GenRequest] = []
         self.events: List[Tuple[str, int, int]] = []   # (kind, step, uid)
         self.step_count = 0
+
+    def _init_compute(self) -> None:
+        """Build the jitted forward halves and the stacked per-slot cache
+        buffers. The token-streaming session overrides this with split
+        head/tail state (see :mod:`repro.serving.streaming`)."""
+        L = self.cfg.max_seq_len
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, L)
+        )
+        self._decode = jax.jit(
+            jax.vmap(self.model.decode_step, in_axes=(None, 0, 0, 0))
+        )
+        self._caches = self._stack_slots(self.model.init_caches(1, L, 0))
+
+    def _stack_slots(self, one: Any) -> Any:
+        """Zeros-initialized per-slot stack of a batch-1 cache tree."""
+        n = self.cfg.max_batch
+        return jax.tree.map(
+            lambda a: jnp.zeros((n,) + a.shape, a.dtype), one
+        )
 
     # ------------------------------------------------------------ admission
     def submit(self, req: GenRequest) -> None:
@@ -109,6 +119,22 @@ class ContinuousBatchingEngine:
 
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self._slots) if r is None]
+
+    def _active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slots) if r is not None]
+
+    def _admit(self) -> None:
+        """Admit eligible queued requests into free slots (FIFO; requests
+        whose ``arrival`` lies in the future are deferred in order)."""
+        free = self._free_slots()
+        deferred: List[GenRequest] = []
+        while free and self.queue:
+            req = self.queue.popleft()
+            if req.arrival > self.step_count - 1:
+                deferred.append(req)
+                continue
+            self._join(free.pop(0), req)
+        self.queue.extendleft(reversed(deferred))
 
     # ------------------------------------------------------------- internals
     def _join(self, slot: int, req: GenRequest) -> None:
@@ -170,6 +196,16 @@ class ContinuousBatchingEngine:
         if finished:
             self._evict(slot)
 
+    @staticmethod
+    def _masked_update(old_tree: Any, new_tree: Any, mj: jnp.ndarray) -> Any:
+        """Advance only the masked slots of a stacked state tree."""
+        return jax.tree.map(
+            lambda old, new: jnp.where(
+                mj.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
+            ),
+            old_tree, new_tree,
+        )
+
     def _evict(self, slot: int) -> None:
         req = self._slots[slot]
         req.done_step = self.step_count
@@ -185,18 +221,8 @@ class ContinuousBatchingEngine:
         that finished during this step."""
         self.step_count += 1
         done_before = len(self.completed)
-
-        free = self._free_slots()
-        deferred: List[GenRequest] = []
-        while free and self.queue:
-            req = self.queue.popleft()
-            if req.arrival > self.step_count - 1:
-                deferred.append(req)
-                continue
-            self._join(free.pop(0), req)
-        self.queue.extendleft(reversed(deferred))
-
-        active = [i for i, r in enumerate(self._slots) if r is not None]
+        self._admit()
+        active = self._active_slots()
         if active:
             logits, new_caches = self._decode(
                 self.params, self._last, self._pos, self._caches
@@ -206,12 +232,7 @@ class ContinuousBatchingEngine:
             mask = np.zeros((self.cfg.max_batch,), bool)
             mask[active] = True
             mj = jnp.asarray(mask)
-            self._caches = jax.tree.map(
-                lambda old, new: jnp.where(
-                    mj.reshape((-1,) + (1,) * (new.ndim - 1)), new, old
-                ),
-                self._caches, new_caches,
-            )
+            self._caches = self._masked_update(self._caches, new_caches, mj)
             self._pos = jnp.where(mj, self._pos + 1, self._pos)
             # One batched select + one host transfer for all active slots
             # (the old path synced the host once per slot per step).
