@@ -12,11 +12,16 @@ Also reported (not gated): steady-state tokens/s of a real
 :class:`TokenStreamSession` on an LM config, against the planner's
 modeled cloud-only generation loop at the same bandwidth
 (``StreamPlanTerms.token_time`` vs ``cloud_only_stream_time`` terms),
-plus the serving-time int8 KV-cache byte ratio of the cloud tail.
+plus the serving-time int8 KV-cache byte ratio of the cloud tail, and
+the same session forced onto a huffman-codec plan — asserting the
+per-step boundary group encodes in exactly 2 device dispatches
+(the device-resident histogram + pack path) and reporting its
+ms/token.
 """
 from __future__ import annotations
 
 import time
+from dataclasses import replace
 from typing import Dict, List
 
 import jax.numpy as jnp
@@ -142,6 +147,47 @@ def _stream_report(quick: bool) -> Dict:
     sess.run()
     wall = time.perf_counter() - t0
     measured = (sess.tokens_out - SLOTS) / max(wall, 1e-9)
+
+    # Same cut forced onto the huffman wire: the per-step boundary
+    # group must ride the two-dispatch device-resident entropy encode
+    # (histogram + pack), never a per-slot host loop. Launch accounting
+    # is asserted around the encode itself so the tail decode's own
+    # dispatch cannot mask a regression.
+    hplan = replace(plan, codec="huffman")
+    hsess = TokenStreamSession(engine.model, params,
+                               ServeConfig(max_batch=SLOTS,
+                                           max_seq_len=32),
+                               plan=hplan)
+    for i in range(SLOTS):
+        hsess.submit(GenRequest(
+            uid=i, tokens=rng.integers(1, 100, size=4).astype(np.int32),
+            max_new_tokens=n_tok))
+    hsess.step()                 # prefill + compile
+    hsess.step()                 # steady state
+    enc_counts: List[int] = []
+    orig_encode = hsess._codec.encode_batch
+
+    def _counted(xs, bits):
+        with ops.count_launches() as c:
+            out = orig_encode(xs, bits)
+        enc_counts.append(c.count)
+        return out
+
+    hsess._codec.encode_batch = _counted
+    try:
+        hsess.step()
+    finally:
+        del hsess._codec.encode_batch
+    assert enc_counts == [2], (
+        f"huffman-plan step must encode its boundary group in exactly "
+        f"2 device dispatches (histogram + pack), saw {enc_counts}")
+    n_timed = 4 if quick else 12
+    t0 = time.perf_counter()
+    for _ in range(n_timed):
+        hsess.step()
+    hwall = time.perf_counter() - t0
+    huffman_ms_per_token = hwall / (n_timed * SLOTS) * 1e3
+
     del jax
     return {
         "point": plan.point,
@@ -157,6 +203,8 @@ def _stream_report(quick: bool) -> Dict:
         / max(sess.tokens_out, 1),
         "kv_bytes_ratio": (sess.kv_bytes_ratio
                            if sess.kv_bytes_ratio is not None else 1.0),
+        "huffman_ms_per_token": huffman_ms_per_token,
+        "huffman_encode_launches_per_step": enc_counts[0],
     }
 
 
@@ -181,6 +229,11 @@ def run(quick: bool = True) -> Dict:
           f"wire carries the boundary row, not a 4-byte id); measured "
           f"{stream['measured_tokens_per_s']:.1f} tok/s, int8 tail KV at "
           f"{stream['kv_bytes_ratio']:.2f}x fp bytes")
+    print(f"Huffman-plan wire: "
+          f"{stream['huffman_ms_per_token']:.2f}ms/token with the "
+          f"boundary group encoded in "
+          f"{stream['huffman_encode_launches_per_step']} device "
+          f"dispatches per step (histogram + pack)")
     return {"encode_gate": gate, "stream": stream}
 
 

@@ -133,11 +133,11 @@ class BoundaryCodec(ABC):
                      ) -> List["WireBlob"]:
         """Encode a stack of boundary tensors in one go (the serving
         pipeline's micro-batched edge step). The base implementation
-        loops — correct for any codec, and the only option for host
-        entropy coders like huffman whose encode is inherently
-        per-tensor. Device codecs override it with a single batched
-        kernel launch when every tensor shares one shape; each blob must
-        be byte-identical to ``encode`` of that tensor alone."""
+        loops — always correct. Every built-in codec overrides it with a
+        batched device encode when the tensors share one shape (huffman
+        included, via the two-phase histogram + pack kernels of
+        ``repro.kernels.entropy``); each blob must be byte-identical to
+        ``encode`` of that tensor alone."""
         return [self.encode(x, bits) for x in xs]
 
     def decode_batch(self, blobs: Sequence["WireBlob"],

@@ -1,0 +1,262 @@
+"""Pallas kernel for the device half of the batched Huffman encode.
+
+The entropy codec's phase 2 (see ``ops.py`` for the two-phase layout):
+given the per-sample canonical ``(code, length)`` LUTs that phase 1's
+histogram produced on the host, ONE ``pallas_call`` turns the raw float
+boundary stack into the packed Huffman bitstream words:
+
+  quantize tile -> LUT gather -> prefix-sum of bit lengths
+  (+ SMEM carry across blocks) -> shifted two-part emission -> u32 words
+
+The quantized codes exist only inside the kernel body — they never
+touch HBM; what leaves the device is exactly the wire words.
+
+The whole batch runs as ONE flat stream: sample ``b``'s bits are based
+at ``32 * w_words * b``, so the (B, m, 128) tile stack flattens to
+(B*m, 128) rows walked by a single 1-D grid, and every prefix sum spans
+the full batch instead of restarting per sample. The per-sample base
+offsets (host-known, since phase 1 fixed each sample's exact
+``total_bits``) ride in as per-row operands next to each row's
+(min, scale) affine scalars and sample id.
+
+Layout invariants the host framing relies on:
+
+* Bit ``k`` of sample ``b``'s stream lives in word ``b * w_words +
+  (k >> 5)`` at bit position ``31 - (k & 31)`` — i.e. serializing each
+  sample's word row big-endian reproduces the MSB-first ``np.packbits``
+  layout of ``ent.huffman_encode`` byte-for-byte.
+* Emission is a segment-*sum*, which equals a segment-*or* because the
+  prefix sum gives every symbol a disjoint bit range (no carries can
+  occur). The word index per part is non-decreasing — within a sample
+  it comes from the prefix sum, and across samples the bases jump
+  forward — so the reduction is a sorted-segment cumsum diff, never a
+  scatter (XLA CPU, where interpret mode runs, lowers scatter to a
+  serial update loop). The u32 cumsums wrap mod 2^32 but the boundary
+  diff recovers each segment exactly. A spilling symbol always ends
+  exactly one word after its start word (its code is <= 32 bits), so
+  part1's per-word segments shift right by one word instead of needing
+  their own boundary search; the entry shifted out is zero, and no
+  spill can cross into the next sample's word row (it would contradict
+  ``total_bits <= 32 * w_words``).
+* Words past a sample's ``total_bits`` stay zero (the output block is
+  fully assigned at grid step 0), so truncating the big-endian bytes to
+  ``ceil(total_bits / 8)`` matches ``np.packbits`` padding.
+
+Codes are capped at 32 bits (``ops.PACK_MAX_CODE_BITS``) so a symbol
+spans at most two u32 words and all shift arithmetic stays in-lane;
+deeper trees route to the host reference path before launch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quantize import quantize as k
+from repro.kernels.quantize.ops import _to_tiles_batch
+
+LANES = k.LANES
+
+
+def _huffman_pack_kernel(mn_ref, scale_ref, base_ref, sid_ref, lut0_ref,
+                         lut1_ref, x_ref, out_ref, carry_ref, *, bits: int,
+                         n_elem: int, e_pad: int, s_pad: int,
+                         has_pad: bool, fold: int, split_lut: bool):
+    """One grid step packs one (bm, 128) row block of the flattened
+    (B*m, 128) batch stream.
+
+    The SMEM carry threads the stream-relative exclusive prefix sum of
+    bit lengths across blocks (padding symbols count zero bits, so the
+    carry stays exact through sample tails); the per-row ``base``
+    operand then rebases each sample's bits to its own word row.
+    """
+    i = pl.program_id(0)
+    blk = x_ref[...].astype(jnp.float32)             # (bm, 128)
+    levels = float((1 << bits) - 1)
+    mn = mn_ref[...]                                 # (bm, 1) per-row affine
+    scale = scale_ref[...]
+    # Same affine map as core.quantization.quantize / the fused encode
+    # kernel — bitwise-identical codes, recomputed from the (min, scale)
+    # scalars phase 1 already reduced.
+    q = jnp.clip(jnp.round((blk - mn) * scale), 0.0, levels)
+    sid = sid_ref[...]                               # (bm, 1) sample id
+    idx = (q.astype(jnp.int32) + sid * s_pad).reshape(-1)
+    if split_lut:
+        # Codes too wide to share a u32 with their length (only
+        # reachable at fold == 1 with > 26-bit codes): two gathers.
+        c = lut0_ref[...][0][idx]
+        length = lut1_ref[...][0][idx].astype(jnp.int32)
+    else:
+        # (length << 26) | code in one u32 entry — the per-element
+        # gather is the kernel's costliest op, so halving the gather
+        # count beats the two unpack shifts by a wide margin. Host
+        # guarantees code < 2^26 (fold >= 2 already implies <= 16-bit
+        # codes).
+        e = lut0_ref[...][0][idx]
+        c = e & jnp.uint32((1 << 26) - 1)
+        length = (e >> 26).astype(jnp.int32)
+    if has_pad:
+        # Padding (a sample's tile tail, or all-padding rows past the
+        # last sample) must emit nothing: zero its (code, length) before
+        # the fold/scan. Skipped (statically) when n_elem fills the
+        # tiles exactly and the grid has no tail rows — then every
+        # symbol came from real data. A zeroed pair stays inert through
+        # everything below: it folds as ``(c << 0) | 0`` and emits
+        # ``0 << sh``.
+        bm, n = blk.shape
+        gpos = ((i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, n), 0))
+                * n + jax.lax.broadcasted_iota(jnp.int32, (bm, n), 1))
+        valid = ((gpos - sid * e_pad) < n_elem).reshape(-1)
+        length = jnp.where(valid, length, 0)
+        c = jnp.where(valid, c, jnp.uint32(0))
+    base = jnp.broadcast_to(base_ref[...], blk.shape).reshape(-1)
+
+    # Concatenating Huffman codes is associative, so when the table's
+    # longest code fits ``fold`` times into a u32 word (host-checked:
+    # fold * max_len <= 32), adjacent symbols fold into one super-symbol
+    # whose (code, length) feed the very same two-part emission — and
+    # every prefix sum below runs over E / fold elements. Canonical
+    # codes satisfy code < 2^length, so the OR never overlaps bits; a
+    # fold group never straddles samples (fold <= 16 divides the
+    # 128-lane row, rows never straddle samples).
+    if fold > 1:
+        cf = c.reshape(-1, fold)
+        lf = length.reshape(-1, fold)
+        c, length = cf[:, 0], lf[:, 0]
+        for j in range(1, fold):
+            c = (c << lf[:, j].astype(jnp.uint32)) | cf[:, j]
+            length = length + lf[:, j]
+        base = base.reshape(-1, fold)[:, 0]
+
+    # Stream-relative exclusive prefix sum of bit lengths (intra-block
+    # cumsum + the SMEM carry over previous blocks), rebased per sample:
+    # ``base[b] = 32 * w_words * b - (total bits of samples < b)``.
+    ends = jnp.cumsum(length)
+
+    @pl.when(i == 0)
+    def _reset_carry():
+        carry_ref[0] = 0
+
+    carry = carry_ref[0]
+    starts = carry + ends - length + base
+    carry_ref[0] = carry + ends[-1]
+
+    # Two-part shifted emission (all in u32 — no u64 dependency): a code
+    # starting at bit offset ``o`` in word ``w0`` contributes its top
+    # ``32 - o`` bits there and spills the rest into ``w0 + 1``. Shift
+    # amounts are clamped into [0, 31] because jnp.where evaluates both
+    # branches; spill parts are selected away so clamping never corrupts
+    # bits.
+    o = starts & 31
+    w0 = starts >> 5
+    spill = (o + length) > 32
+    sh0 = jnp.clip(32 - o - length, 0, 31).astype(jnp.uint32)
+    k1 = jnp.clip(o + length - 32, 0, 31).astype(jnp.uint32)
+    sh1 = jnp.clip(64 - o - length, 0, 31).astype(jnp.uint32)
+    part0 = jnp.where(spill, c >> k1, c << sh0)
+    part1 = jnp.where(spill, c << sh1, jnp.uint32(0))
+
+    w_tot = out_ref.shape[-1]
+    w0 = jnp.minimum(w0, w_tot - 1)                  # padding at stream end
+
+    # w0 is non-decreasing (see module docstring), so each word is a
+    # *sorted-segment* sum of its parts, computable as a cumsum diff at
+    # binary-searched segment boundaries — no scatter.
+    wids = jnp.arange(w_tot, dtype=jnp.int32)
+    bound = jnp.searchsorted(w0, wids, side="right")
+    zero1 = jnp.zeros((1,), jnp.uint32)
+
+    def seg_sum(parts):
+        totals = jnp.concatenate([zero1, jnp.cumsum(parts)])
+        seg = totals[bound]
+        return seg - jnp.concatenate([totals[:1], seg[:-1]])
+
+    words = seg_sum(part0) + jnp.concatenate([zero1, seg_sum(part1)[:-1]])
+
+    @pl.when(i == 0)
+    def _first_block():
+        out_ref[...] = words[None]
+
+    @pl.when(i > 0)
+    def _accumulate():
+        out_ref[...] = out_ref[...] | words[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("w_words", "bits", "n_elem", "block_m", "fold",
+                     "split_lut", "interpret"))
+def huffman_pack_blocks(xb2: jnp.ndarray, mn, scale, base_bits, w_words: int,
+                        code_lut=None, len_lut=None, *, bits: int,
+                        n_elem: int, block_m: int, fold: int = 1,
+                        split_lut: bool = False,
+                        interpret: bool) -> jnp.ndarray:
+    """One launch: a flat (B, n_elem) float stack + (B, S_pad) canonical
+    LUTs -> (B, w_words) packed bitstream words.
+
+    The (B*m, 128) flat-stream tiling happens in here (under the jit, so
+    it is part of the single compiled dispatch, not extra eager
+    launches): per-sample (min, scale, bit base, id) scalars expand to
+    per-row operand columns, the LUT rows flatten into one gatherable
+    table, and the 1-D grid walks row blocks sized to divide the stream
+    as evenly as possible. ``base_bits`` carries the host-computed
+    per-sample word-row rebase (phase 1 fixed every ``total_bits``, so
+    the output width is static). The (1, B*w_words) output block is
+    revisited by every grid step: fully assigned at step 0,
+    OR-accumulated after, so the flush order stays consecutive.
+
+    Jitted (shape/width-static) so the interpret-mode grid walk compiles
+    into one executable instead of re-tracing per call; the dispatch is
+    counted by the eager caller (``ops.huffman_encode_batch_device``),
+    not here, so ``count_launches`` sees every launch, warm or not.
+    """
+    x3d, _ = _to_tiles_batch(xb2, block_m)
+    bsz, m, n = x3d.shape
+    rows = bsz * m
+    # Row blocks sized to split the stream evenly: ceil-divide the row
+    # count into the fewest blocks of <= block_m rows, so a stream just
+    # past one block gets two near-halves instead of a block_m block
+    # plus a sliver of padding.
+    nb = -(-rows // block_m)
+    bm = -(-rows // nb)
+    bm = -(-bm // 8) * 8
+    rows_pad = nb * bm
+    xr = x3d.reshape(rows, n)
+    sid = jnp.repeat(jnp.arange(bsz, dtype=jnp.int32), m)
+    mn_r = jnp.repeat(mn.astype(jnp.float32), m)
+    scale_r = jnp.repeat(scale.astype(jnp.float32), m)
+    base_r = jnp.repeat(jnp.asarray(base_bits, jnp.int32), m)
+    if rows_pad > rows:
+        pad = rows_pad - rows
+        xr = jnp.concatenate([xr, jnp.zeros((pad, n), xr.dtype)])
+        sid = jnp.concatenate([sid, jnp.full((pad,), bsz - 1, sid.dtype)])
+        mn_r = jnp.concatenate([mn_r, jnp.zeros((pad,), mn_r.dtype)])
+        scale_r = jnp.concatenate([scale_r,
+                                   jnp.zeros((pad,), scale_r.dtype)])
+        base_r = jnp.concatenate([base_r,
+                                  jnp.broadcast_to(base_r[-1:], (pad,))])
+    s_pad = code_lut.shape[-1]
+    kernel = functools.partial(
+        _huffman_pack_kernel, bits=bits, n_elem=n_elem, e_pad=m * n,
+        s_pad=s_pad, has_pad=(m * n != n_elem) or (rows_pad != rows),
+        fold=fold, split_lut=split_lut)
+    col = pl.BlockSpec((bm, 1), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            col, col, col, col,
+            pl.BlockSpec((1, bsz * s_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, bsz * s_pad), lambda i: (0, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bsz * w_words), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, bsz * w_words), jnp.uint32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(mn_r[:, None], scale_r[:, None], base_r[:, None], sid[:, None],
+      code_lut.reshape(1, -1), len_lut.reshape(1, -1), xr)
+    return out.reshape(bsz, w_words)

@@ -12,6 +12,7 @@ from repro.kernels.quantize.ops import (
     quantize_pack_threelaunch,
     dequantize_unpack,
     dequantize_codes,
+    dequantize_codes_batch,
     dequantize_wire,
     dequantize_wire_batch,
     perchannel_encode,
@@ -31,6 +32,7 @@ __all__ = [
     "quantize_pack_threelaunch",
     "dequantize_unpack",
     "dequantize_codes",
+    "dequantize_codes_batch",
     "dequantize_wire",
     "dequantize_wire_batch",
     "perchannel_encode",

@@ -286,6 +286,51 @@ def dequantize_codes(
     return x3d.reshape(-1)[:n_elem].reshape(shape)
 
 
+def dequantize_codes_batch_impl(codes2, mn, mx, bits, shape,
+                                block_m=k.DEFAULT_BLOCK_M, interpret=None,
+                                out_dtype=jnp.float32):
+    if interpret is None:
+        interpret = _should_interpret()
+    bsz = codes2.shape[0]
+    n_elem = int(np.prod(shape))
+    if n_elem == 0:
+        return jnp.zeros((bsz,) + tuple(shape), out_dtype)
+    q3d, _ = _to_tiles_batch(codes2.astype(k.code_dtype(bits)).reshape(
+        bsz, -1), block_m, bits)
+    bm = min(block_m, q3d.shape[1])
+    x3d = k.fused_decode_blocks(
+        q3d,
+        jnp.asarray(mn, jnp.float32).reshape(bsz),
+        jnp.asarray(mx, jnp.float32).reshape(bsz),
+        bits, bm, out_dtype, packed=False, interpret=interpret,
+    )
+    return x3d.reshape(bsz, -1)[:, :n_elem].reshape((bsz,) + tuple(shape))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "shape", "block_m", "interpret", "out_dtype"),
+)
+def dequantize_codes_batch(
+    codes2: jnp.ndarray,
+    mn,
+    mx,
+    bits: int,
+    shape: Tuple[int, ...],
+    block_m: int = k.DEFAULT_BLOCK_M,
+    interpret: bool | None = None,
+    out_dtype=jnp.float32,
+):
+    """Batched :func:`dequantize_codes`: a (B, n) stack of unpacked
+    integer codes (e.g. B host-Huffman-decoded payloads) + (B,) ranges
+    -> (B, *shape) activations in one fused dequant+cast launch. Unlike
+    :func:`dequantize_wire_batch` the codes are one-per-element at every
+    bit width — the entropy coder's decode output, not the bitpack wire
+    layout."""
+    return dequantize_codes_batch_impl(codes2, mn, mx, bits, shape,
+                                       block_m, interpret, out_dtype)
+
+
 def _wire_tiles(codes_flat: jnp.ndarray, n_elem: int, bits: int,
                 block_m: int) -> jnp.ndarray:
     """Re-pad flat wire codes (per sample) to the 2-D tile layout

@@ -23,9 +23,12 @@ MaxText-style SPMD runner:
   "model" axis).
 
 * **One fused forward.** For the bitpack wire format decode + tail run
-  under ONE ``jax.jit`` per (point, bits, boundary shape); other codecs
-  decode through their existing batch path and reshard only the stacked
-  boundary. Results are float-level equivalent to the single-device tail
+  under ONE ``jax.jit`` per (point, bits, boundary shape); huffman
+  groups ride the same fused jit after the host entropy decode stacks
+  their codes (the ``wire="codes"`` flavor) — no more per-blob
+  single-device fallback. Remaining codecs decode through their
+  existing batch path and reshard only the stacked boundary. Results
+  are float-level equivalent to the single-device tail
   (XLA re-blocks reductions per partitioning — pinned by tolerance in
   ``tests/test_meshed.py``), which is the same contract as
   ``fuse_tail=True``.
@@ -142,18 +145,24 @@ class MeshedCloudWorker:
 
     # ---------------------------------------------------------- jit cache
     def _fused_fn(self, point: int, bits: int, blob_shape: Tuple[int, ...],
-                  dtype):
-        """ONE jit: sharded wire decode -> constrain -> sharded tail."""
-        key = (point, bits, blob_shape, dtype)
+                  dtype, wire: str = "bitpack"):
+        """ONE jit: sharded wire decode -> constrain -> sharded tail.
+
+        ``wire`` picks the decode flavor: "bitpack" feeds the flat
+        bitpack wire codes through ``dequantize_wire_batch_impl``;
+        "codes" feeds one-code-per-element stacks (the host Huffman
+        decoder's output) through ``dequantize_codes_batch_impl``."""
+        key = (point, bits, blob_shape, dtype, wire)
         fn = self._fused.get(key)
         if fn is None:
             from repro.kernels.quantize import ops
 
             model = self.model
+            decode = (ops.dequantize_wire_batch_impl if wire == "bitpack"
+                      else ops.dequantize_codes_batch_impl)
 
             def fused(params, codes, mn, mx, extras):
-                x = ops.dequantize_wire_batch_impl(
-                    codes, mn, mx, bits, blob_shape, out_dtype=dtype)
+                x = decode(codes, mn, mx, bits, blob_shape, out_dtype=dtype)
                 # Merge (n_blobs, b, ...) -> (n_blobs * b, ...): one tail
                 # forward over the whole group's samples.
                 x = x.reshape((-1,) + tuple(blob_shape[1:]))
@@ -187,6 +196,8 @@ class MeshedCloudWorker:
         fused tail) or None when the group cannot batch-shard."""
         from repro.codec import get_codec
         from repro.codec.bitpack import BitpackCodec
+        from repro.codec.huffman import HuffmanCodec
+        from repro.core import entropy as ent
 
         blobs = list(blobs)
         if not blobs or plan.is_cloud_only:
@@ -209,18 +220,34 @@ class MeshedCloudWorker:
         ds = self.data_size
         total = sum(counts)
 
-        fused_ok = (isinstance(codec, BitpackCodec)
-                    and len({b.shape for b in blobs}) == 1
-                    and len({b.bits for b in blobs}) == 1)
-        if fused_ok:
-            # Host side does framing only (exactly like codec.decode); the
-            # decode itself happens inside the fused sharded jit, directly
-            # into the per-device batch shards.
+        wire = None
+        if (len({b.shape for b in blobs}) == 1
+                and len({b.bits for b in blobs}) == 1):
+            if isinstance(codec, BitpackCodec):
+                wire = "bitpack"
+            elif isinstance(codec, HuffmanCodec):
+                wire = "codes"
+        if wire is not None:
+            # Host side does framing only for bitpack (exactly like
+            # codec.decode) and the per-payload entropy decode for
+            # huffman (data-dependent lengths are inherently host work);
+            # the dequant itself happens inside the fused sharded jit,
+            # directly into the per-device batch shards — huffman groups
+            # no longer fall back to the per-blob single-device path.
             nb = len(blobs)
             nb_pad = -(-nb // ds) * ds
             per = counts[0]
-            codes = _tile_to(
-                np.stack([codec._wire_codes(b) for b in blobs]), nb_pad)
+            if wire == "bitpack":
+                stacked = np.stack([codec._wire_codes(b) for b in blobs])
+            else:
+                from repro.kernels.quantize.quantize import code_dtype
+
+                cdt = np.dtype(code_dtype(int(blobs[0].bits)))
+                stacked = np.stack([
+                    ent.huffman_decode(b.payload).astype(cdt)
+                    for b in blobs
+                ])
+            codes = _tile_to(stacked, nb_pad)
             mn = _tile_to(
                 np.stack([np.float32(b.x_min) for b in blobs]), nb_pad)
             mx = _tile_to(
@@ -229,7 +256,7 @@ class MeshedCloudWorker:
                 extras = jax.tree.map(
                     lambda a: _tile_to(a, nb_pad * per), extras)
             fn = self._fused_fn(point, int(blobs[0].bits),
-                                tuple(blobs[0].shape), dtype)
+                                tuple(blobs[0].shape), dtype, wire)
             args = self._put_batched((codes, mn, mx))
             extras = self._put_batched(extras)
             with self.mesh:

@@ -15,8 +15,10 @@ batching engine so the decode loop itself runs across the cut:
   check at session construction).
 * **Amortized wire.** Per engine step the head halves of ALL active
   slots run as one vmapped decode, their boundary rows are encoded in
-  **one** batched ``encode_batch`` (one fused Pallas launch for device
-  codecs), decoded in one ``decode_batch``, and the tail halves advance
+  **one** batched ``encode_batch`` (a single fused Pallas launch for
+  the fixed-rate device codecs; two device dispatches — histogram +
+  pack — for huffman's device-resident entropy encode, never a
+  per-slot loop), decoded in one ``decode_batch``, and the tail halves advance
   in one vmapped decode. Token selection keeps the scheduler's single
   host-sync-per-step property; the wire adds exactly one more host
   round-trip per step, never one per slot.
@@ -236,8 +238,9 @@ class TokenStreamSession(ContinuousBatchingEngine):
     # ------------------------------------------------------------------ step
     def step(self) -> List[GenRequest]:
         """One engine step across the cut: admit, vmapped head decode,
-        ONE batched boundary encode (a single fused Pallas launch for
-        device codecs), ONE batched wire decode, vmapped tail decode,
+        ONE batched boundary encode (at most two device dispatches for
+        any built-in codec — huffman included), ONE batched wire
+        decode, vmapped tail decode,
         one batched token select + host sync. Returns the requests that
         finished during this step."""
         self.step_count += 1
