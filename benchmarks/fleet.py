@@ -46,6 +46,15 @@ regress):
    per-device ``with_edge(p).decide(bw)`` oracle on every run (the full
    randomized pin lives in tests/test_fleet_planner.py).
 
+4. **Three-tier fleet re-planning stays cheap.** One
+   ``TriFleetAdaptationController`` round — the fused
+   ``TriFleetPlanSpace.decide_all`` over the Pareto-kept two-cut cells
+   with per-device (BW1, BW2) pairs, plus the vectorized hysteresis
+   commit — must stay within a fixed per-device budget at the
+   paper-scale grid and D = 10^5 devices. A random device sample is
+   spot-pinned against the scalar two-cut oracle
+   (``TriPlanSpace.decide`` on a per-device view).
+
 Also reports the end-to-end fleet numbers (makespan vs the fully
 sequential sum of service times) for the N-device round-robin stream.
 """
@@ -77,6 +86,9 @@ REPLAN_SPEEDUP_MIN = 10.0      # planner re-solve vs ILPProblem rebuild
 FLEET_SIZES = (1_000, 10_000, 100_000)
 FLEET_SUBLINEAR_MARGIN = 0.9   # 100x devices must cost < 0.9 * 100x time
 FLEET_BUDGET_US = 2.0          # per-device re-decision budget at D = 1e5
+TRI_FLEET_BUDGET_US = 10.0     # three-tier per-device budget at D = 1e5
+TRI_FLEET_SIZES = (10_000, 100_000)
+TRI_FLEET_ORACLE_SAMPLE = 4    # scalar-oracle spot-pins (finalize is heavy)
 FLEET_ORACLE_SAMPLE = 16       # devices spot-checked against with_edge
 FLEET_DRIFT_ROUNDS = 6         # distinct bandwidth vectors cycled per size
 FLEET_TIMING_REPS = 20         # interleaved best-of reps per size
@@ -402,6 +414,66 @@ def run(quick: bool = True) -> Dict:
     assert per_device_us <= FLEET_BUDGET_US, (
         f"per-device decision overhead at D={d_hi:,} must stay within "
         f"{FLEET_BUDGET_US}us, got {per_device_us:.3f}us"
+    )
+
+    # ------------------------------------------- 3b. three-tier re-plan
+    from repro.core.adaptation import TriFleetAdaptationController
+    from repro.core.tri_planner import TriFleetPlanSpace
+
+    from benchmarks.table3_edge_power import replace_device
+
+    tri = _paper_scale_engine().tri_space
+    rng = np.random.default_rng(13)
+    tri_times = {n: np.inf for n in TRI_FLEET_SIZES}
+    tri_fleets = {}
+    for n_dev in TRI_FLEET_SIZES:
+        flops = rng.uniform(2e11, 5e12, n_dev)
+        w = rng.uniform(0.8, 1.5, n_dev)
+        tfs = TriFleetPlanSpace.build(tri, flops=flops, w=w)
+        drifts = [(10 ** rng.uniform(4.5, 7.5, n_dev),
+                   10 ** rng.uniform(5.5, 8.0, n_dev))
+                  for _ in range(FLEET_DRIFT_ROUNDS)]
+        ctrl = TriFleetAdaptationController(tfs)
+        ctrl.current_plans(*drifts[0])             # warm buffers + commit
+        tri_fleets[n_dev] = (tfs, ctrl, drifts, flops, w)
+    for rep in range(FLEET_TIMING_REPS):
+        for n_dev, (tfs, ctrl, drifts, _, _) in tri_fleets.items():
+            b1, b2 = drifts[rep % len(drifts)]
+            t0 = time.perf_counter()
+            ctrl.current_plans(b1, b2)
+            tri_times[n_dev] = min(tri_times[n_dev],
+                                   time.perf_counter() - t0)
+    tri_rows = []
+    for n_dev in TRI_FLEET_SIZES:
+        tri_rows.append([f"{n_dev:,}", f"{tri_times[n_dev] * 1e3:.2f}ms",
+                         f"{tri_times[n_dev] / n_dev * 1e6:.3f}us"])
+    # spot-pin a device sample against the scalar two-cut oracle
+    tfs, _, drifts, flops, w = tri_fleets[TRI_FLEET_SIZES[0]]
+    decision = tfs.decide_all(*drifts[0])
+    for d in rng.choice(TRI_FLEET_SIZES[0], size=TRI_FLEET_ORACLE_SAMPLE,
+                        replace=False):
+        view = replace_device(
+            tri, DeviceProfile(f"tri-{d}", float(flops[d]), float(w[d])))
+        ref = view.decide(float(drifts[0][0][d]), float(drifts[0][1][d]))
+        got = decision.plan(int(d))
+        assert (got.point, got.bits, got.point2, got.bits2) == \
+            (ref.point, ref.bits, ref.point2, ref.bits2), d
+        assert got.predicted_latency == ref.predicted_latency, d
+    tri_per_device_us = tri_times[TRI_FLEET_SIZES[-1]] \
+        / TRI_FLEET_SIZES[-1] * 1e6
+    results["tri_fleet_scaling"] = {
+        "kept_cells": tfs.n_cells,
+        "replan_round_ms": {str(n): tri_times[n] * 1e3
+                            for n in TRI_FLEET_SIZES},
+        "per_device_us_at_max": tri_per_device_us,
+        "oracle_sample": TRI_FLEET_ORACLE_SAMPLE,
+    }
+    print(f"\nThree-tier fleet re-plan (two-cut grid, "
+          f"{tfs.n_cells} Pareto-kept cells)")
+    print(fmt_table(tri_rows, ["devices", "replan round", "per device"]))
+    assert tri_per_device_us <= TRI_FLEET_BUDGET_US, (
+        f"three-tier per-device re-plan at D={TRI_FLEET_SIZES[-1]:,} must "
+        f"stay within {TRI_FLEET_BUDGET_US}us, got {tri_per_device_us:.3f}us"
     )
 
     # ----------------------------------------------- 4. end-to-end stream

@@ -250,11 +250,34 @@ class DeviceProfile:
 CLOUD_1080TI = DeviceProfile("nvidia-1080ti-cloud", 12e12, 2.1761)
 EDGE_TX2 = DeviceProfile("nvidia-tegra-x2", 2e12, 1.1176)
 EDGE_TK1 = DeviceProfile("nvidia-tegra-k1", 300e9, 1.1176)
+# Mid-tier edge server (three-tier topology): a desktop-class GPU racked at
+# the basestation/MEC site, between the Tegra devices and the 1080Ti cloud.
+EDGE_SERVER_1060 = DeviceProfile("nvidia-1060-edge-server", 4.4e12, 2.1761)
 
 # TPU v5e (target hardware for rooflines).
 TPU_V5E = DeviceProfile("tpu-v5e", 197e12, 1.0)
 TPU_V5E_HBM_BW = 819e9        # bytes/s
 TPU_V5E_ICI_BW = 50e9         # bytes/s per link
+
+
+@dataclass(frozen=True)
+class TierPowerModel:
+    """Active-power model of the three-tier path (device → edge server →
+    cloud). The per-request energy of a plan is
+
+        E = p_dev·T_dev + p_es·T_es + p_cl·T_cl
+            + p_tx1·(S1/BW1) + p_tx2·(S2/BW2)   [joules]
+
+    i.e. per-tier compute watts times per-tier execution time, plus the
+    radio/NIC watts times each link's transfer time (the MCC-scheduling
+    per-core + per-link power model, applied to JALAD's split execution).
+    """
+
+    device_w: float = 5.0            # Tegra-class SoC under load
+    edge_server_w: float = 70.0      # desktop GPU at the MEC site
+    cloud_w: float = 250.0           # datacenter GPU
+    tx1_w: float = 1.3               # device radio while uplinking
+    tx2_w: float = 4.0               # edge-server backhaul NIC
 
 
 @dataclass(frozen=True)
@@ -274,3 +297,15 @@ class JaladConfig:
     # Channel removal (RL bandit) options.
     channel_removal: bool = False
     channel_removal_budget: float = 0.25     # max fraction of channels dropped
+    # --- three-tier extension (device → edge server → cloud) ---
+    # Middle-tier compute and the second (edge-server → cloud) link. The
+    # two-tier fields above keep their meaning: ``edge`` is the device tier,
+    # ``bandwidth_bytes_per_s`` the first (device → edge-server) link.
+    edge_server: DeviceProfile = EDGE_SERVER_1060
+    bandwidth2_bytes_per_s: float = 20e6     # LAN/backhaul uplink
+    power: TierPowerModel = TierPowerModel()
+    # Energy objective weight λ (seconds per joule): the planner minimizes
+    # Z = T + λ·E. λ = 0 keeps the pure-latency objective bitwise intact.
+    energy_weight: float = 0.0
+    # Optional hard per-request energy cap (joules); None = unconstrained.
+    energy_budget_j: Optional[float] = None

@@ -22,6 +22,7 @@ from repro.core.ilp import ILPProblem, solve
 from repro.core.latency import LatencyModel
 from repro.core.planner import PlanSpace, StreamPlanTerms
 from repro.core.predictor import PredictorTables
+from repro.core.tri_planner import TriPlanSpace
 from repro.core.quantization import quantize_dequantize
 from repro.models.api import Model
 
@@ -29,7 +30,17 @@ from repro.models.api import Model
 @dataclass
 class DecoupledPlan:
     """The outcome of one ILP solve: where to cut, at what bit width, and
-    through which boundary codec."""
+    through which boundary codec.
+
+    A three-tier solve (``repro.core.tri_planner``) fills the second cut:
+    the device runs ``[0, point]``, an edge server runs ``(point, point2]``
+    and the cloud runs the rest, with the second boundary quantized to
+    ``bits2`` through ``codec2``. Two-tier plans keep the defaults
+    (``point2 = -1``), so every existing consumer of the single-cut
+    contract is untouched. A degenerate middle tier (``point2 == point``)
+    relays the first blob through the edge server unchanged — the planner
+    only emits such cells with ``bits2 == bits`` and ``codec2 == codec``.
+    """
 
     point: int
     bits: int
@@ -37,10 +48,18 @@ class DecoupledPlan:
     predicted_acc_drop: float
     solve_ms: float
     codec: str = "huffman"
+    # --- three-tier extension (second ordered cut; -1 = no middle tier) ---
+    point2: int = -1
+    bits2: int = 0
+    codec2: str = ""
 
     @property
     def is_cloud_only(self) -> bool:
         return self.point < 0
+
+    @property
+    def has_second_cut(self) -> bool:
+        return self.point2 >= 0
 
 
 @dataclass
@@ -186,6 +205,81 @@ class DecoupledRunner:
         return self._tail(self.params, xq, self.plan.point)
 
 
+@dataclass
+class TriDecoupledRunner:
+    """Executable three-way split (device → edge server → cloud) for a plan
+    carrying a second cut. Three steps mirror the three tiers:
+    ``device_step`` runs ``[0, point]`` and encodes the first boundary;
+    ``edge_server_step`` decodes it, runs ``(point, point2]`` and encodes
+    the second boundary; ``cloud_step`` finishes from ``point2``. A
+    degenerate middle tier (``point2 == point``) relays the device blob
+    through unchanged — no decode/re-encode, byte-identical wire blob on
+    both links, exactly how the planner prices diagonal cells."""
+
+    model: Model
+    params: Any
+    plan: DecoupledPlan
+
+    def __post_init__(self):
+        from repro.codec import get_codec
+
+        if not self.plan.has_second_cut:
+            raise ValueError("TriDecoupledRunner needs a plan with a second "
+                             "cut (point2 >= 0); use DecoupledRunner for "
+                             "two-tier plans")
+        if self.plan.point2 < self.plan.point:
+            raise ValueError(f"cuts must be ordered, got "
+                             f"({self.plan.point}, {self.plan.point2})")
+        self._head = jax.jit(self.model.run_head, static_argnums=2)
+        self._seg = jax.jit(self.model.run_segment, static_argnums=(2, 3))
+        self._tail = jax.jit(self.model.run_tail, static_argnums=2)
+        self._codec1: "BoundaryCodec" = get_codec(self.plan.codec)
+        self._codec2: "BoundaryCodec" = get_codec(self.plan.codec2)
+
+    @property
+    def is_relay(self) -> bool:
+        return self.plan.point2 == self.plan.point
+
+    def device_step(self, batch) -> Tuple["WireBlob", Any]:
+        out = self._head(self.params, batch, self.plan.point)
+        boundary, extras = out if isinstance(out, tuple) else (out, None)
+        blob = self._codec1.encode(boundary, self.plan.bits)
+        return blob, extras
+
+    def edge_server_step(self, blob: "WireBlob",
+                         extras=None) -> Tuple["WireBlob", Any]:
+        """Middle tier: first-link blob in, second-link blob out."""
+        from repro.codec import get_codec
+
+        if self.is_relay:
+            return blob, extras
+        dtype = jnp.dtype(self.model.cfg.dtype)
+        boundary = get_codec(blob.codec).decode(blob, out_dtype=dtype)
+        out = self._seg(self.params, boundary, self.plan.point,
+                        self.plan.point2, extras)
+        boundary2, extras = out if isinstance(out, tuple) else (out, extras)
+        blob2 = self._codec2.encode(boundary2, self.plan.bits2)
+        return blob2, extras
+
+    def cloud_step(self, blob: "WireBlob", extras=None):
+        from repro.codec import get_codec
+
+        dtype = jnp.dtype(self.model.cfg.dtype)
+        boundary = get_codec(blob.codec).decode(blob, out_dtype=dtype)
+        if extras is not None:
+            return self._tail(self.params, boundary, self.plan.point2,
+                              extras)
+        return self._tail(self.params, boundary, self.plan.point2)
+
+    def run(self, batch):
+        """Full three-hop inference; returns
+        ``(logits, link1_bytes, link2_bytes)``."""
+        blob1, extras = self.device_step(batch)
+        blob2, extras = self.edge_server_step(blob1, extras)
+        logits = self.cloud_step(blob2, extras)
+        return logits, blob1.nbytes, blob2.nbytes
+
+
 # ---------------------------------------------------------------------------
 # Recurrent-state compression (SSM/hybrid decode across the cut)
 # ---------------------------------------------------------------------------
@@ -222,9 +316,13 @@ class JaladEngine:
     latency: LatencyModel
     cfg: JaladConfig
     point_indices: Optional[List[int]] = None   # tables row -> model point
+    # Cloud mesh applied to lazily-built spaces (set by with_cloud_mesh).
+    cloud_mesh: Optional[Any] = None
     _plan_space: Optional[PlanSpace] = field(
         default=None, repr=False, compare=False)
     _stream_terms: Optional[StreamPlanTerms] = field(
+        default=None, repr=False, compare=False)
+    _tri_space: Optional[TriPlanSpace] = field(
         default=None, repr=False, compare=False)
 
     @property
@@ -235,6 +333,39 @@ class JaladEngine:
                 self.point_indices,
             )
         return self._plan_space
+
+    @property
+    def tri_space(self) -> TriPlanSpace:
+        """The three-tier (device → edge server → cloud) generalization of
+        :attr:`plan_space`, built lazily from the same tables/latency with
+        the config's middle-tier device and power model. Degenerate at
+        ``BW1 = inf`` it reproduces ``plan_space.decide`` bitwise."""
+        if self._tri_space is None:
+            tri = TriPlanSpace.build(
+                self.tables, self.latency, self.cfg.accuracy_drop_budget,
+                edge_server=self.cfg.edge_server,
+                power=self.cfg.power,
+                energy_weight=self.cfg.energy_weight,
+                point_indices=self.point_indices,
+            )
+            if self.cloud_mesh is not None:
+                tri = tri.with_cloud_mesh(self.cloud_mesh)
+            self._tri_space = tri
+        return self._tri_space
+
+    def decide_tri(self, bandwidth1: Optional[float] = None,
+                   bandwidth2: Optional[float] = None,
+                   energy_budget: Optional[float] = None) -> DecoupledPlan:
+        """Three-tier decision at the two link bandwidths (defaults from
+        the config), honouring the config's energy budget unless
+        overridden."""
+        bw1 = bandwidth1 if bandwidth1 is not None else \
+            self.cfg.bandwidth_bytes_per_s
+        bw2 = bandwidth2 if bandwidth2 is not None else \
+            self.cfg.bandwidth2_bytes_per_s
+        budget = energy_budget if energy_budget is not None else \
+            self.cfg.energy_budget_j
+        return self.tri_space.decide(bw1, bw2, energy_budget=budget)
 
     def ilp_problem(self, bandwidth: float) -> ILPProblem:
         """The selection problem over the joint choice axis: the (C, K)
@@ -308,7 +439,7 @@ class JaladEngine:
                            self.latency.cloud, self.latency.input_bytes)
         return _dc.replace(self, latency=lat,
                            _plan_space=self.plan_space.with_edge(edge_profile),
-                           _stream_terms=None)
+                           _stream_terms=None, _tri_space=None)
 
     def with_cloud_mesh(self, mesh_model) -> "JaladEngine":
         """An engine whose PlanSpace prices the cloud side under a
@@ -318,11 +449,17 @@ class JaladEngine:
         engine keep the meshed cloud vector."""
         import dataclasses as _dc
 
+        tri = (self._tri_space.with_cloud_mesh(mesh_model)
+               if self._tri_space is not None else None)
         return _dc.replace(
             self, _plan_space=self.plan_space.with_cloud_mesh(mesh_model),
-            _stream_terms=None)
+            _stream_terms=None, _tri_space=tri, cloud_mesh=mesh_model)
 
     def make_runner(self, params, plan: DecoupledPlan,
                     mesh_worker: Optional[Any] = None) -> DecoupledRunner:
         return DecoupledRunner(self.model, params, plan,
                                mesh_worker=mesh_worker)
+
+    def make_tri_runner(self, params,
+                        plan: DecoupledPlan) -> TriDecoupledRunner:
+        return TriDecoupledRunner(self.model, params, plan)

@@ -246,6 +246,35 @@ class Model:
                                        start=point + 1)
         return _transformer_tail(self, params, boundary, point, extras)
 
+    def run_segment(self, params, boundary, from_point: int, to_point: int,
+                    extras=None):
+        """Run the middle tier of a three-way split: layers
+        ``(from_point, to_point]`` on the boundary produced by
+        ``run_head(..., from_point)``. The result is the boundary that
+        ``run_tail(..., to_point)`` resumes from, so
+
+            run_tail(run_segment(run_head(x, i1), i1, i2), i2)
+
+        equals the full forward pass. ``from_point == to_point`` is the
+        degenerate (relay) middle tier and returns ``boundary`` unchanged.
+        For transformers the return is ``(boundary2, extras)`` — the same
+        extras dict, since positions/encoder output are cut-invariant."""
+        if to_point < from_point:
+            raise ValueError(f"segment requires from_point <= to_point, got "
+                             f"({from_point}, {to_point})")
+        cfg = self.cfg
+        if cfg.family == "cnn":
+            if to_point == from_point:
+                return boundary
+            layers = cnn_lib.build_layers(cfg)
+            return cnn_lib.cnn_forward(layers, params, boundary,
+                                       start=from_point + 1,
+                                       upto=to_point + 1)
+        if to_point == from_point:
+            return boundary, extras
+        return _transformer_segment(self, params, boundary, from_point,
+                                    to_point, extras)
+
     # -------------------------------------- token streaming (JALAD decode)
     def _check_token_split(self) -> None:
         if self.cfg.family == "cnn":
@@ -467,6 +496,44 @@ def _transformer_tail(model: Model, params, boundary, point: int, extras):
 
         (x,), _ = jax.lax.scan(body, (x,), seg_params)
     return tf_lib._logits(params, cfg, x)
+
+
+def _transformer_segment(model: Model, params, boundary, from_point: int,
+                         to_point: int, extras):
+    """Blocks ``(from_point, to_point]`` — ``_transformer_tail`` bounded at
+    the second cut instead of running to the logits."""
+    cfg = model.cfg
+    plan = tf_lib.segment_plan(cfg)
+    si, off = _point_to_segment(cfg, from_point)
+    si2, off2 = _point_to_segment(cfg, to_point)
+    x = boundary
+    ctx = tf_lib.blk.SeqContext(
+        extras["positions"], extras.get("pos3d"),
+        tf_lib.effective_window(cfg, x.shape[1]), 0, extras.get("enc_out")
+    )
+    for sj in range(si, si2 + 1):
+        seg = plan[sj]
+        lo = off + 1 if sj == si else 0
+        hi = off2 + 1 if sj == si2 else seg.count
+        if lo >= hi:
+            continue
+        if seg.shared:
+            if sj == si:   # the cut block itself was already run upstream
+                continue
+            x, _, _ = tf_lib.blk.block_apply_seq(
+                "A", params["shared_attn"], x, ctx, cfg
+            )
+            continue
+        seg_params = _slice_seg(params["segments"][sj], lo, hi)
+
+        def body(carry, layer_params, kind=seg.kind):
+            h, = carry
+            h, _, _ = tf_lib.blk.block_apply_seq(kind, layer_params, h, ctx,
+                                                 cfg)
+            return (h,), None
+
+        (x,), _ = jax.lax.scan(body, (x,), seg_params)
+    return x, extras
 
 
 def _block_fmacs_per_token(cfg: ModelConfig) -> List[float]:

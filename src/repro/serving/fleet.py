@@ -119,6 +119,9 @@ class FleetRequest:
     batch: Any
     bandwidth: float                      # true link bandwidth (per request)
     arrival_s: float = 0.0
+    # Second (edge-server -> cloud) link bandwidth for three-tier serving;
+    # 0.0 on two-tier traces (ignored by FleetServer).
+    bandwidth2: float = 0.0
     # Filled by the fleet:
     logits: Any = None
     plan: Optional[DecoupledPlan] = None

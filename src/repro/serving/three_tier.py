@@ -1,0 +1,321 @@
+"""Three-tier JALAD serving: device → edge server → cloud on one clock.
+
+The three-hop generalization of :mod:`repro.serving.fleet`: every request
+crosses five simulated stages —
+
+  device compute [0, i1]  ->  encode₁  ->  uplink transfer (S1/BW1)
+  ->  edge-server compute (i1, i2] (+ decode₁/encode₂)
+  ->  backhaul transfer (S2/BW2)  ->  cloud compute (i2, N)
+
+with per-device FIFO device+uplink stages and SHARED edge-server,
+backhaul and cloud stages (one MEC site serves the whole fleet, exactly
+as one cloud does in ``FleetServer``). Decisions come from ONE
+vectorized :class:`~repro.core.adaptation.TriFleetAdaptationController`
+re-plan per serving wave over the flattened two-cut index; numerics from
+real :class:`~repro.core.decoupler.TriDecoupledRunner` steps (head →
+codec → segment → codec → tail).
+
+The accounting contract (pinned in ``tests/test_three_tier_serving.py``):
+each breakdown component equals the planner's prediction exactly —
+``edge_s/edge_server_s/cloud_s`` are ``TriPlanSpace.stage_times`` and,
+for fixed-rate codecs whose wire bytes match the calibration tables
+(bitpack), ``transfer_s/transfer2_s`` are exactly
+``plan_sizes / bandwidth``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config.types import DeviceProfile, JaladConfig
+from repro.core.adaptation import TriFleetAdaptationController
+from repro.core.decoupler import DecoupledPlan, JaladEngine, TriDecoupledRunner
+from repro.core.latency import PNG_RATIO
+from repro.core.tri_planner import TriFleetPlanSpace
+from repro.serving.edge_cloud import LatencyBreakdown
+from repro.serving.fleet import FleetRequest
+
+TriPlanKey = Tuple[int, int, str, int, int, str]
+
+
+@dataclass
+class TriStageTimeline:
+    """Simulated-clock occupancy of one request across the five stages."""
+
+    arrival_s: float = 0.0
+    device_start: float = 0.0
+    device_end: float = 0.0
+    xfer1_start: float = 0.0
+    xfer1_end: float = 0.0
+    es_start: float = 0.0
+    es_end: float = 0.0
+    xfer2_start: float = 0.0
+    xfer2_end: float = 0.0
+    cloud_start: float = 0.0
+    cloud_end: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.cloud_end - self.arrival_s
+
+    @property
+    def service_s(self) -> float:
+        """Pure service time: the synchronous (no-queueing) latency."""
+        return ((self.device_end - self.device_start)
+                + (self.xfer1_end - self.xfer1_start)
+                + (self.es_end - self.es_start)
+                + (self.xfer2_end - self.xfer2_start)
+                + (self.cloud_end - self.cloud_start))
+
+
+@dataclass
+class ThreeTierServer:
+    """Serve D devices through one shared edge server and one cloud.
+
+    ``engine`` supplies the tables and the three-tier space template
+    (``engine.tri_space``); ``edge_profiles`` stack into one
+    :class:`TriFleetPlanSpace` for the fused fleet re-plan. Runners are
+    shared across devices: a full six-tuple plan key compiles once.
+    """
+
+    engine: JaladEngine
+    params: Any
+    edge_profiles: Sequence[DeviceProfile]
+    controller: Optional[TriFleetAdaptationController] = None
+    fleet_space: Optional[TriFleetPlanSpace] = None
+    max_history: Optional[int] = None
+    completed: List[FleetRequest] = field(default_factory=list)
+    _runners: Dict[TriPlanKey, TriDecoupledRunner] = field(
+        default_factory=dict, repr=False)
+    _full_forward: Any = field(default=None, repr=False)
+    # Simulated FIFO clocks: per-device device+uplink, shared middle/cloud.
+    _device_free: np.ndarray = field(default=None, repr=False)
+    _link1_free: np.ndarray = field(default=None, repr=False)
+    _es_free: float = 0.0
+    _link2_free: float = 0.0
+    _cloud_free: float = 0.0
+    _timelines: Dict[int, TriStageTimeline] = field(default_factory=dict,
+                                                    repr=False)
+
+    def __post_init__(self):
+        if not self.edge_profiles:
+            raise ValueError("ThreeTierServer needs at least one profile")
+        if self.fleet_space is None:
+            self.fleet_space = TriFleetPlanSpace.build(
+                self.engine.tri_space, list(self.edge_profiles))
+        if self.controller is None:
+            self.controller = TriFleetAdaptationController(
+                self.fleet_space,
+                default_bw1=self.engine.cfg.bandwidth_bytes_per_s,
+                default_bw2=self.engine.cfg.bandwidth2_bytes_per_s,
+                max_history=self.max_history)
+        d = len(self.edge_profiles)
+        self._device_free = np.zeros(d)
+        self._link1_free = np.zeros(d)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.edge_profiles)
+
+    # ------------------------------------------------------------ runners
+    def _runner(self, plan: DecoupledPlan) -> TriDecoupledRunner:
+        key = (plan.point, plan.bits, plan.codec,
+               plan.point2, plan.bits2, plan.codec2)
+        runner = self._runners.get(key)
+        if runner is None:
+            runner = TriDecoupledRunner(self.engine.model, self.params,
+                                        plan)
+            self._runners[key] = runner
+        return runner
+
+    def _full(self):
+        if self._full_forward is None:
+            import jax
+
+            self._full_forward = jax.jit(self.engine.model.forward)
+        return self._full_forward
+
+    # -------------------------------------------------------------- waves
+    def _waves(self, reqs: List[FleetRequest]) -> List[List[FleetRequest]]:
+        seq: Dict[int, int] = {}
+        waves: List[List[FleetRequest]] = []
+        for r in reqs:
+            k = seq.get(r.device_id, 0)
+            seq[r.device_id] = k + 1
+            if k == len(waves):
+                waves.append([])
+            waves[k].append(r)
+        return waves
+
+    def timeline_for(self, uid: int) -> TriStageTimeline:
+        return self._timelines[uid]
+
+    # -------------------------------------------------------------- serve
+    def serve(self, requests: Iterable[FleetRequest]) -> List[FleetRequest]:
+        """Run a three-tier request stream to completion; returns the
+        requests in cloud-completion order. ``FleetRequest.bandwidth`` is
+        the device uplink, ``bandwidth2`` the edge-server backhaul
+        (``<= 0`` falls back to the config's second-link bandwidth)."""
+        reqs = list(requests)
+        for r in reqs:
+            if not 0 <= r.device_id < self.n_devices:
+                raise ValueError(
+                    f"request {r.uid} names unknown device {r.device_id}")
+        tri = self.fleet_space.tri
+        default_bw2 = self.engine.cfg.bandwidth2_bytes_per_s
+        for wave in self._waves(reqs):
+            m = len(wave)
+            dv = np.fromiter((r.device_id for r in wave), np.int64, m)
+            bw1 = np.fromiter((r.bandwidth for r in wave), np.float64, m)
+            bw2 = np.fromiter(
+                (r.bandwidth2 if r.bandwidth2 > 0 else default_bw2
+                 for r in wave), np.float64, m)
+            # ONE fused fleet re-decision for the whole wave.
+            cells, _ = self.controller.current_plans(bw1, bw2, dv)
+            dev_t, es_t, cl_t = self.fleet_space.stage_times_all(cells, dv)
+            # Device + uplink: real numerics and exact wire bytes.
+            n1 = np.empty(m)
+            for i, r in enumerate(wave):
+                plan = self.controller.plan_for(r.device_id)
+                r.plan = plan
+                if plan.is_cloud_only:
+                    n1[i] = int(tri.input_bytes * PNG_RATIO)
+                elif r.batch is not None:
+                    runner = self._runner(plan)
+                    r._blob, r._extras = runner.device_step(r.batch)
+                    n1[i] = r._blob.nbytes
+                else:
+                    # Decision-plane run: charge the planner's sizes.
+                    n1[i] = tri.plan_sizes(plan)[0]
+            t1 = n1 / bw1
+            arrival = np.fromiter((r.arrival_s for r in wave),
+                                  np.float64, m)
+            dev_start = np.maximum(arrival, self._device_free[dv])
+            dev_end = dev_start + dev_t
+            self._device_free[dv] = dev_end
+            x1_start = np.maximum(dev_end, self._link1_free[dv])
+            x1_end = x1_start + t1
+            self._link1_free[dv] = x1_end
+            self.controller.observe_transfers(
+                np.maximum(n1, 1), np.maximum(t1, 1e-9), dv, link=1)
+            for i, r in enumerate(wave):
+                tl = TriStageTimeline(
+                    arrival_s=r.arrival_s,
+                    device_start=float(dev_start[i]),
+                    device_end=float(dev_end[i]),
+                    xfer1_start=float(x1_start[i]),
+                    xfer1_end=float(x1_end[i]),
+                )
+                self._timelines[r.uid] = tl
+                r.breakdown = LatencyBreakdown(
+                    float(dev_t[i]), float(t1[i]), float(cl_t[i]),
+                    int(n1[i]),
+                    r.plan.point if not r.plan.is_cloud_only else -1,
+                    r.plan.bits if not r.plan.is_cloud_only else 0,
+                    r.plan.codec if not r.plan.is_cloud_only else "png",
+                    edge_server_s=float(es_t[i]),
+                    plan_point2=(r.plan.point2
+                                 if not r.plan.is_cloud_only else -1),
+                    plan_bits2=(r.plan.bits2
+                                if not r.plan.is_cloud_only else 0),
+                    plan_codec2=(r.plan.codec2
+                                 if not r.plan.is_cloud_only else ""),
+                )
+                r._bw2 = float(bw2[i])
+        # Shared middle + tail stages: FIFO in uplink-completion order.
+        queue = sorted(
+            reqs, key=lambda r: (self._timelines[r.uid].xfer1_end,
+                                 r.device_id, r.uid))
+        obs_n2, obs_t2, obs_dv = [], [], []
+        for r in queue:
+            tl = self._timelines[r.uid]
+            bd = r.breakdown
+            plan = r.plan
+            # Edge-server stage (decode₁ + segment + encode₂; zero-time
+            # relay when the plan is diagonal or cloud-only).
+            tl.es_start = max(tl.xfer1_end, self._es_free)
+            tl.es_end = tl.es_start + bd.edge_server_s
+            self._es_free = tl.es_end
+            if plan.is_cloud_only:
+                nb2 = bd.bytes_sent
+                if r.batch is not None:
+                    r.logits = self._full()(self.params, r.batch)
+            elif r.batch is not None:
+                runner = self._runner(plan)
+                blob2, r._extras = runner.edge_server_step(
+                    r._blob, r._extras)
+                r._blob = blob2
+                nb2 = blob2.nbytes
+            else:
+                nb2 = tri.plan_sizes(plan)[1]
+            bd.bytes_sent2 = int(nb2)
+            bd.transfer2_s = nb2 / r._bw2
+            tl.xfer2_start = max(tl.es_end, self._link2_free)
+            tl.xfer2_end = tl.xfer2_start + bd.transfer2_s
+            self._link2_free = tl.xfer2_end
+            obs_n2.append(max(nb2, 1))
+            obs_t2.append(max(bd.transfer2_s, 1e-9))
+            obs_dv.append(r.device_id)
+            # Cloud tail.
+            tl.cloud_start = max(tl.xfer2_end, self._cloud_free)
+            tl.cloud_end = tl.cloud_start + bd.cloud_s
+            self._cloud_free = tl.cloud_end
+            if not plan.is_cloud_only and r.batch is not None:
+                runner = self._runner(plan)
+                r.logits = runner.cloud_step(r._blob, r._extras)
+            r._blob = r._extras = None
+        if obs_dv:
+            self.controller.observe_transfers(
+                np.asarray(obs_n2), np.asarray(obs_t2),
+                np.asarray(obs_dv, dtype=np.int64), link=2)
+        self.completed.extend(queue)
+        return queue
+
+    # ----------------------------------------------------------- reporting
+    @property
+    def makespan_s(self) -> float:
+        if not self.completed:
+            return 0.0
+        start = min(self._timelines[r.uid].arrival_s
+                    for r in self.completed)
+        return max(self._timelines[r.uid].cloud_end
+                   for r in self.completed) - start
+
+    def synchronous_time_s(self) -> float:
+        return sum(r.breakdown.total_s for r in self.completed)
+
+
+def build_three_tier_server(
+    cfg,
+    jalad_cfg: JaladConfig,
+    edge_profiles: Sequence[DeviceProfile],
+    *,
+    seed: int = 0,
+    calib_batches: int = 2,
+    calib_batch_size: int = 8,
+    seq_len: int = 64,
+    params: Any = None,
+    points: Optional[List[int]] = None,
+    max_history: Optional[int] = None,
+) -> Tuple[ThreeTierServer, Any]:
+    """End-to-end factory reusing the two-tier calibration pipeline: one
+    table build, one TriPlanSpace, one stacked TriFleetPlanSpace."""
+    from repro.serving.edge_cloud import build_edge_cloud_server
+
+    srv, params = build_edge_cloud_server(
+        cfg, jalad_cfg, seed=seed, calib_batches=calib_batches,
+        calib_batch_size=calib_batch_size, seq_len=seq_len, params=params,
+        points=points,
+    )
+    server = ThreeTierServer(srv.engine, params, list(edge_profiles),
+                             max_history=max_history)
+    return server, params
+
+
+__all__ = [
+    "ThreeTierServer",
+    "TriStageTimeline",
+    "build_three_tier_server",
+]

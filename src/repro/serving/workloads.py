@@ -80,6 +80,14 @@ class FleetTrace:
     step_ids: np.ndarray              # (R,) trace step of each request
     bandwidths: np.ndarray            # (R,) true link bandwidth per request
     flash_window_s: Optional[Tuple[float, float]] = None
+    # Three-tier traces: the edge-server -> cloud backhaul, an independent
+    # walk per device's serving edge server. None = two-tier trace.
+    bw2_walks: Optional[np.ndarray] = None    # (T, D) second-link series
+    bandwidths2: Optional[np.ndarray] = None  # (R,) second link per request
+
+    @property
+    def has_link2(self) -> bool:
+        return self.bw2_walks is not None
 
     @property
     def n_steps(self) -> int:
@@ -119,6 +127,8 @@ class FleetTrace:
                 batch=batch_factory(uid, d) if batch_factory else None,
                 bandwidth=float(self.bandwidths[uid]),
                 arrival_s=float(self.arrival_s[uid]),
+                bandwidth2=(float(self.bandwidths2[uid])
+                            if self.bandwidths2 is not None else 0.0),
             ))
         return out
 
@@ -131,7 +141,10 @@ def make_trace(n_devices: int, n_steps: int, *, seed: int,
                hi_bps: float = 32e6,
                flash_start: float = 0.5, flash_len: float = 0.2,
                flash_bw_drop: float = 8.0,
-               flash_load_spike: float = 3.0) -> FleetTrace:
+               flash_load_spike: float = 3.0,
+               link2: bool = False, mean2_bps: float = 20e6,
+               sigma2: float = 0.10, spread2: float = 2.0,
+               lo2_bps: float = 1e6, hi2_bps: float = 200e6) -> FleetTrace:
     """Generate a seed-deterministic fleet trace.
 
     ``kind``:
@@ -143,6 +156,15 @@ def make_trace(n_devices: int, n_steps: int, *, seed: int,
         ``flash_start`` (fraction of the trace) of length ``flash_len``
         where arrival probability multiplies by ``flash_load_spike`` and
         every device's bandwidth divides by ``flash_bw_drop``.
+
+    ``link2=True`` makes the trace three-tier drivable: a second,
+    independent family of bounded walks (the edge-server -> cloud
+    backhaul — faster, steadier, tighter spread by default) drawn from
+    the SAME rng stream, immediately after the first-link walks and
+    before arrival sampling. Two-tier traces (``link2=False``) consume
+    exactly the rng draws they always did, so existing seeds reproduce
+    bit-identical traces. A flash crowd congests the cellular uplink
+    only; the backhaul walk is untouched.
     """
     if kind not in ("steady", "diurnal", "flash_crowd"):
         raise ValueError(f"unknown trace kind {kind!r}")
@@ -150,6 +172,12 @@ def make_trace(n_devices: int, n_steps: int, *, seed: int,
     walks = bandwidth_walks(n_devices, n_steps, seed=seed,
                             mean_bps=mean_bps, sigma=sigma, spread=spread,
                             lo_bps=lo_bps, hi_bps=hi_bps, rng=rng)
+    walks2 = None
+    if link2:
+        walks2 = bandwidth_walks(n_devices, n_steps, seed=seed,
+                                 mean_bps=mean2_bps, sigma=sigma2,
+                                 spread=spread2, lo_bps=lo2_bps,
+                                 hi_bps=hi2_bps, rng=rng)
     if kind == "diurnal":
         rates = diurnal_rates(n_steps, base=base_rate, peak=peak_rate)
     else:
@@ -166,7 +194,7 @@ def make_trace(n_devices: int, n_steps: int, *, seed: int,
     # Arrival sampling: per step, each device fires with prob rates[t];
     # a request's arrival jitters uniformly inside its step so the
     # stream is not lock-step synchronized across the fleet.
-    arrivals, devices, steps, bws = [], [], [], []
+    arrivals, devices, steps, bws, bws2 = [], [], [], [], []
     for t in range(n_steps):
         active = np.nonzero(rng.random(n_devices) < rates[t])[0]
         if active.size == 0:
@@ -176,6 +204,8 @@ def make_trace(n_devices: int, n_steps: int, *, seed: int,
         devices.append(active)
         steps.append(np.full(active.size, t, dtype=np.int64))
         bws.append(walks[t, active])
+        if walks2 is not None:
+            bws2.append(walks2[t, active])
     if arrivals:
         arrival_s = np.concatenate(arrivals)
         device_ids = np.concatenate(devices)
@@ -186,15 +216,19 @@ def make_trace(n_devices: int, n_steps: int, *, seed: int,
         order = np.lexsort((device_ids, arrival_s))
         arrival_s, device_ids = arrival_s[order], device_ids[order]
         step_ids, bandwidths = step_ids[order], bandwidths[order]
+        bandwidths2 = (np.concatenate(bws2)[order]
+                       if walks2 is not None else None)
     else:
         arrival_s = np.zeros(0)
         device_ids = np.zeros(0, dtype=np.int64)
         step_ids = np.zeros(0, dtype=np.int64)
         bandwidths = np.zeros(0)
+        bandwidths2 = np.zeros(0) if walks2 is not None else None
     return FleetTrace(
         seed=seed, dt_s=dt_s, bw_walks=walks, rates=rates,
         arrival_s=arrival_s, device_ids=device_ids, step_ids=step_ids,
         bandwidths=bandwidths, flash_window_s=flash_window,
+        bw2_walks=walks2, bandwidths2=bandwidths2,
     )
 
 

@@ -1,0 +1,197 @@
+"""``max_history`` on every adaptation controller: long-running serving
+commits events forever, so the cap must evict oldest-first while keeping
+``switch_count`` exact, ``history_for``/``history`` returning only the
+retained tail, and (for the scalar controller) listeners still firing
+for every commit — eviction must not eat notifications."""
+import numpy as np
+import pytest
+
+from repro.config.types import CLOUD_1080TI, EDGE_TX2, DeviceProfile
+from repro.core.adaptation import (
+    NO_PLAN,
+    AdaptationController,
+    FleetAdaptationController,
+    TriFleetAdaptationController,
+)
+from repro.core.latency import LatencyModel
+from repro.core.planner import FleetPlanSpace, PlanSpace
+from repro.core.predictor import PredictorTables
+from repro.core.tri_planner import TriFleetPlanSpace, TriPlanSpace
+
+
+def _space(seed=3, n=6, c=3, k=2, budget=0.25):
+    rng = np.random.default_rng(seed)
+    fmacs = rng.random(n) * 1e9 + 1e8
+    lat = LatencyModel(fmacs, EDGE_TX2, CLOUD_1080TI, input_bytes=150_528.0)
+    tables = PredictorTables(
+        points=[f"p{i}" for i in range(n)],
+        bits_choices=[2 + i for i in range(c)],
+        codecs=[f"codec{i}" for i in range(k)],
+        acc_drop=rng.random((n, c, k)) * 0.3,
+        size_bytes=rng.random((n, c, k)) * 1e6 + 1e3,
+        base_accuracy=0.9,
+    )
+    return tables, lat, budget
+
+
+class _EngineView:
+    """The scalar-controller facade: decide / plan_space / cfg."""
+
+    class _Cfg:
+        bandwidth_bytes_per_s = 1e6
+
+    cfg = _Cfg()
+
+    def __init__(self, space):
+        self.plan_space = space
+
+    def decide(self, bandwidth, method="vectorized"):
+        return self.plan_space.decide(bandwidth)
+
+
+def _bw_walk(seed, steps=60):
+    # large swings so hysteresis actually commits plan switches
+    rng = np.random.default_rng(seed)
+    return 10 ** rng.uniform(3.5, 8.0, steps)
+
+
+# ---------------------------------------------------------------------------
+# scalar controller
+# ---------------------------------------------------------------------------
+
+def test_scalar_eviction_keeps_count_and_listeners():
+    tables, lat, budget = _space()
+    eng = _EngineView(PlanSpace.build(tables, lat, budget))
+    capped = AdaptationController(eng, max_history=3)
+    free = AdaptationController(eng)
+    fired = []
+    capped.add_listener(fired.append)
+    for bw in _bw_walk(11):
+        capped.current_plan(float(bw))
+        free.current_plan(float(bw))
+    # the walk must actually exercise switching for this test to bite
+    assert free.switch_count() >= 2
+    assert capped.switch_count() == free.switch_count()
+    assert len(capped.history) <= 3
+    # retained tail == the uncapped run's most recent events
+    assert [(e.step, e.bandwidth) for e in capped.history] == \
+        [(e.step, e.bandwidth) for e in free.history[-len(capped.history):]]
+    # one listener call per commit (initial commit + every switch),
+    # eviction included
+    assert len(fired) == free.switch_count() + 1
+    assert fired[-1].new_plan == capped.plan
+
+
+def test_scalar_unbounded_by_default():
+    tables, lat, budget = _space()
+    eng = _EngineView(PlanSpace.build(tables, lat, budget))
+    ctrl = AdaptationController(eng)
+    for bw in _bw_walk(12):
+        ctrl.current_plan(float(bw))
+    assert len(ctrl.history) == ctrl.switch_count() + 1
+
+
+# ---------------------------------------------------------------------------
+# two-tier fleet controller
+# ---------------------------------------------------------------------------
+
+def _fleet(seed=14, d=9):
+    tables, lat, budget = _space(seed)
+    space = PlanSpace.build(tables, lat, budget)
+    rng = np.random.default_rng(seed ^ 0xF)
+    profiles = [DeviceProfile(f"dev-{i}", float(rng.uniform(1e11, 8e12)),
+                              float(rng.uniform(0.7, 1.6)))
+                for i in range(d)]
+    return FleetPlanSpace.build(space, profiles), d
+
+
+def test_fleet_eviction_keeps_switch_count():
+    fleet_space, d = _fleet()
+    capped = FleetAdaptationController(fleet_space, max_history=2)
+    free = FleetAdaptationController(fleet_space)
+    rng = np.random.default_rng(21)
+    for _ in range(40):
+        bws = 10 ** rng.uniform(3.5, 8.0, d)
+        capped.current_plans(bws)
+        free.current_plans(bws)
+    assert free.switch_count() >= 2
+    assert capped.switch_count() == free.switch_count()
+    assert len(capped.history) <= 2
+    np.testing.assert_array_equal(capped.plan_j, free.plan_j)
+    # history_for returns only retained events — a suffix of the full run
+    for dev in range(d):
+        kept = [(e.step, e.bandwidth) for e in capped.history_for(dev)]
+        full = [(e.step, e.bandwidth) for e in free.history_for(dev)]
+        assert kept == full[len(full) - len(kept):], dev
+
+
+# ---------------------------------------------------------------------------
+# three-tier fleet controller
+# ---------------------------------------------------------------------------
+
+def _tri_fleet(seed=14, d=9):
+    tables, lat, budget = _space(seed)
+    tri = TriPlanSpace.build(
+        tables, lat, budget,
+        edge_server=DeviceProfile("es", 4.4e12, 1.1))
+    rng = np.random.default_rng(seed ^ 0x7)
+    profiles = [DeviceProfile(f"dev-{i}", float(rng.uniform(1e11, 8e12)),
+                              float(rng.uniform(0.7, 1.6)))
+                for i in range(d)]
+    return TriFleetPlanSpace.build(tri, profiles), d
+
+
+def test_tri_fleet_eviction_keeps_switch_count():
+    fleet_space, d = _tri_fleet()
+    capped = TriFleetAdaptationController(fleet_space, max_history=2)
+    free = TriFleetAdaptationController(fleet_space)
+    rng = np.random.default_rng(33)
+    for _ in range(40):
+        b1 = 10 ** rng.uniform(3.5, 8.0, d)
+        b2 = 10 ** rng.uniform(3.5, 8.0, d)
+        capped.current_plans(b1, b2)
+        free.current_plans(b1, b2)
+    assert free.switch_count() >= 2
+    assert capped.switch_count() == free.switch_count()
+    assert len(capped.history) <= 2
+    np.testing.assert_array_equal(capped.plan_c, free.plan_c)
+    for dev in range(d):
+        kept = [(e.step, e.bandwidth) for e in capped.history_for(dev)]
+        full = [(e.step, e.bandwidth) for e in free.history_for(dev)]
+        assert kept == full[len(full) - len(kept):], dev
+        a, b = capped.plan_for(dev), free.plan_for(dev)
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert (a.point, a.bits, a.codec, a.point2, a.bits2,
+                    a.codec2) == (b.point, b.bits, b.codec, b.point2,
+                                  b.bits2, b.codec2)
+
+
+def test_tri_fleet_hysteresis_and_estimators():
+    """First decision commits; per-link EWMA estimates feed the decide
+    when no explicit bandwidths are passed; a bogus observation leaves
+    the estimate untouched; link must be 1 or 2."""
+    fleet_space, d = _tri_fleet(seed=15, d=4)
+    ctrl = TriFleetAdaptationController(fleet_space)
+    cells, lat = ctrl.current_plans(np.full(d, 1e6), np.full(d, 2e7))
+    assert np.all(ctrl.plan_c != NO_PLAN)
+    assert np.all(ctrl.steps == 1)
+    again, _ = ctrl.current_plans(np.full(d, 1e6), np.full(d, 2e7))
+    np.testing.assert_array_equal(cells, again)   # same bw -> no switch
+    ctrl.observe_transfers(np.full(d, 1e6), np.full(d, 0.5), link=1)
+    ctrl.observe_transfers(np.full(d, 4e6), np.full(d, 0.25), link=2)
+    np.testing.assert_allclose(ctrl.bw1_est, 2e6)
+    np.testing.assert_allclose(ctrl.bw2_est, 16e6)
+    before = ctrl.bw1_est.copy()
+    ctrl.observe_transfers(np.zeros(d), np.full(d, 0.5), link=1)
+    np.testing.assert_array_equal(ctrl.bw1_est, before)
+    with pytest.raises(ValueError):
+        ctrl.observe_transfers(np.ones(d), np.ones(d), link=3)
+    # estimator-driven round: decides at the EWMA bandwidths
+    cells_est, lat_est = ctrl.current_plans()
+    dec = fleet_space.decide_all(ctrl.bw1_est, ctrl.bw2_est)
+    held = fleet_space.plan_cost_all(cells, ctrl.bw1_est, ctrl.bw2_est)
+    expect_switch = dec.cost < held * (1 - ctrl.switch_margin)
+    np.testing.assert_array_equal(
+        cells_est, np.where(expect_switch | (dec.cell == cells),
+                            dec.cell, cells))

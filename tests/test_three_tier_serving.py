@@ -1,0 +1,304 @@
+"""Three-tier serving clock pinned to the planner: every completed
+request's breakdown must equal ``TriPlanSpace.stage_times`` exactly, and
+for the fixed-rate ``bitpack`` codec the wire bytes on BOTH links equal
+``plan_sizes`` so ``transfer_s``/``transfer2_s`` are exactly
+``S / BW`` — the simulated clock and the decision objective are the same
+numbers. Also covers the executable three-way split itself
+(``TriDecoupledRunner``): relay plans are byte-identical to the two-tier
+runner, real two-cut plans stay close to the full forward pass."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.config import JaladConfig, get_config
+from repro.config.types import EDGE_TK1, EDGE_TX2, DeviceProfile
+from repro.core.decoupler import (
+    DecoupledPlan,
+    DecoupledRunner,
+    TriDecoupledRunner,
+)
+from repro.core.latency import PNG_RATIO
+from repro.core.planner import _readonly
+from repro.data.synthetic import make_batch
+from repro.serving.fleet import FleetRequest
+from repro.serving.three_tier import ThreeTierServer, build_three_tier_server
+from repro.serving.workloads import make_trace
+
+PROFILES = [
+    EDGE_TX2,                                # paper's TX2
+    EDGE_TK1,                                # much slower device
+    DeviceProfile("edge-mid", 1e12, 1.30),   # in-between device
+]
+# Per-device (uplink, backhaul). TK1 gets a fast LAN uplink + congested
+# backhaul — the regime where a genuine two-cut plan wins (the middle
+# tier absorbs compute AND shrinks the blob before the slow hop).
+BW1S = [1e6, 10e6, 2e6]
+BW2S = [20e6, 1e6, 0.0]                      # 0.0 -> config default
+REQS_PER_DEVICE = 2
+BATCH = 4                                    # == calib_batch_size: the
+# tables price exactly this batch, so bitpack wire bytes match them.
+
+
+def replace_device(tri, device):
+    """Per-device scalar view: same pair grid, different first tier."""
+    dev_vec = _readonly(device.w * tri.cum_fmacs / device.flops)
+    return replace(tri, device=device, dev_vec=dev_vec,
+                   mid_vec=None).finalize()
+
+
+@pytest.fixture(scope="module")
+def tri_setup():
+    cfg = get_config("resnet50").reduced()
+    jc = JaladConfig(bits_choices=(2, 4, 8), codec_choices=("bitpack",),
+                     accuracy_drop_budget=0.10,
+                     bandwidth_bytes_per_s=1e6,
+                     bandwidth2_bytes_per_s=20e6)
+    server, params = build_three_tier_server(
+        cfg, jc, PROFILES, calib_batches=2, calib_batch_size=BATCH)
+    return server, params, cfg, jc
+
+
+@pytest.fixture(scope="module")
+def served(tri_setup):
+    server, params, cfg, jc = tri_setup
+    reqs, uid = [], 0
+    for j in range(REQS_PER_DEVICE):
+        for d in range(len(PROFILES)):
+            reqs.append(FleetRequest(
+                uid=uid, device_id=d, arrival_s=0.01 * uid,
+                batch=make_batch(cfg, BATCH, 0, seed=100 + uid),
+                bandwidth=BW1S[d], bandwidth2=BW2S[d]))
+            uid += 1
+    done = server.serve(reqs)
+    return server, done
+
+
+def _bw2_of(r, jc):
+    return r.bandwidth2 if r.bandwidth2 > 0 else jc.bandwidth2_bytes_per_s
+
+
+# ---------------------------------------------------------------------------
+# the exact-clock contract
+# ---------------------------------------------------------------------------
+
+def test_breakdown_is_planner_stage_times_bitwise(tri_setup, served):
+    """edge_s / edge_server_s / cloud_s are EXACTLY the per-device scalar
+    view's ``stage_times`` — the fleet clock charges the planner's own
+    numbers, not a re-derivation."""
+    server, done = served
+    tri = server.engine.tri_space
+    assert len(done) == len(PROFILES) * REQS_PER_DEVICE
+    for r in done:
+        view = replace_device(tri, PROFILES[r.device_id])
+        dev_t, es_t, cl_t = view.stage_times(r.plan)
+        bd = r.breakdown
+        assert (bd.edge_s, bd.edge_server_s, bd.cloud_s) == \
+            (dev_t, es_t, cl_t), r.uid
+
+
+def test_bitpack_wire_bytes_and_transfers_exact(tri_setup, served):
+    """Fixed-rate codec: actual blob bytes on both links equal the
+    calibration tables' ``plan_sizes``, so the charged transfer times are
+    exactly S1/BW1 and S2/BW2 — no divergence between the simulated wire
+    and the objective the plan was chosen by."""
+    server, done = served
+    _, _, _, jc = tri_setup
+    tri = server.engine.tri_space
+    for r in done:
+        assert not r.plan.is_cloud_only
+        assert r.plan.codec == "bitpack"
+        s1, s2 = tri.plan_sizes(r.plan)
+        bd = r.breakdown
+        assert bd.bytes_sent == int(s1)
+        assert bd.bytes_sent2 == int(s2)
+        assert bd.transfer_s == s1 / r.bandwidth
+        assert bd.transfer2_s == s2 / _bw2_of(r, jc)
+
+
+def test_two_cut_plan_actually_served(served):
+    """The LAN-uplink + congested-backhaul device must land on a genuine
+    two-cut plan (point2 > point) — the serving path exercises the real
+    device -> edge-server -> cloud split, not just relays."""
+    _, done = served
+    two_cut = [r for r in done if r.plan.point2 > r.plan.point]
+    assert two_cut, "no request served with a genuine second cut"
+    for r in two_cut:
+        assert r.breakdown.edge_server_s > 0.0
+        assert r.breakdown.plan_point2 == r.plan.point2
+        assert r.logits is not None
+
+
+def test_timeline_fifo_and_identities(served):
+    """Simulated-clock sanity: stages are causal per request, per-device
+    stages are FIFO, shared stages (edge server, backhaul, cloud) are
+    FIFO in completion order, and the timeline's durations ARE the
+    breakdown components."""
+    server, done = served
+    per_device = {}
+    for r in done:
+        tl = server.timeline_for(r.uid)
+        bd = r.breakdown
+        assert tl.device_start >= tl.arrival_s == r.arrival_s
+        assert tl.xfer1_start >= tl.device_end
+        assert tl.es_start >= tl.xfer1_end
+        assert tl.xfer2_start >= tl.es_end
+        assert tl.cloud_start >= tl.xfer2_end
+        assert tl.device_end - tl.device_start == pytest.approx(bd.edge_s)
+        assert tl.xfer1_end - tl.xfer1_start == pytest.approx(bd.transfer_s)
+        assert tl.es_end - tl.es_start == pytest.approx(bd.edge_server_s)
+        assert tl.xfer2_end - tl.xfer2_start == \
+            pytest.approx(bd.transfer2_s)
+        assert tl.cloud_end - tl.cloud_start == pytest.approx(bd.cloud_s)
+        assert tl.latency_s == pytest.approx(tl.cloud_end - tl.arrival_s)
+        assert tl.service_s == pytest.approx(bd.total_s)
+        assert tl.latency_s >= tl.service_s - 1e-12   # queueing only adds
+        per_device.setdefault(r.device_id, []).append(tl)
+    for tls in per_device.values():
+        tls.sort(key=lambda t: t.device_start)
+        for a, b in zip(tls, tls[1:]):
+            assert b.device_start >= a.device_end
+            assert b.xfer1_start >= a.xfer1_end
+    # shared stages: `done` is cloud-completion order == uplink order
+    for a, b in zip(done, done[1:]):
+        ta, tb = server.timeline_for(a.uid), server.timeline_for(b.uid)
+        assert tb.es_start >= ta.es_end
+        assert tb.xfer2_start >= ta.xfer2_end
+        assert tb.cloud_start >= ta.cloud_end
+    assert server.makespan_s == pytest.approx(
+        max(server.timeline_for(r.uid).cloud_end for r in done)
+        - min(r.arrival_s for r in done))
+    assert server.synchronous_time_s() == pytest.approx(
+        sum(r.breakdown.total_s for r in done))
+
+
+def test_decision_plane_trace_charges_planner_sizes(tri_setup):
+    """A batchless trace (decision-plane run) still gets the exact
+    planner accounting: bytes are ``plan_sizes``, stage times are
+    ``stage_times`` — the clock needs no tensors to be exact."""
+    srv, params, cfg, jc = tri_setup
+    server = ThreeTierServer(srv.engine, params, PROFILES)
+    trace = make_trace(len(PROFILES), 12, seed=7, link2=True,
+                       mean_bps=2e6, mean2_bps=8e6)
+    done = server.serve(trace.requests())
+    assert done
+    tri = server.engine.tri_space
+    for r in done:
+        assert r.logits is None and r.batch is None
+        bd = r.breakdown
+        view = replace_device(tri, PROFILES[r.device_id])
+        assert (bd.edge_s, bd.edge_server_s, bd.cloud_s) == \
+            view.stage_times(r.plan)
+        if not r.plan.is_cloud_only:
+            s1, s2 = tri.plan_sizes(r.plan)
+            assert bd.bytes_sent == int(s1)
+            assert bd.bytes_sent2 == int(s2)
+            assert bd.transfer_s == s1 / r.bandwidth
+            assert bd.transfer2_s == s2 / _bw2_of(r, jc)
+
+
+def test_cloud_only_path(tri_setup):
+    """An impossible accuracy budget forces cloud-only everywhere: the
+    device ships a PNG-compressed input over BOTH hops, the middle tier
+    relays it in zero time, and the logits are the full forward pass."""
+    srv, params, cfg, jc = tri_setup
+    eng = replace(srv.engine, cfg=replace(jc, accuracy_drop_budget=-1.0),
+                  _plan_space=None, _tri_space=None, _stream_terms=None)
+    server = ThreeTierServer(eng, params, PROFILES[:2])
+    batch = make_batch(cfg, BATCH, 0, seed=3)
+    done = server.serve([
+        FleetRequest(uid=0, device_id=0, batch=dict(batch), bandwidth=1e6),
+        FleetRequest(uid=1, device_id=1, batch=None, bandwidth=5e5),
+    ])
+    tri = eng.tri_space
+    expect_bytes = int(tri.input_bytes * PNG_RATIO)
+    for r in done:
+        assert r.plan.is_cloud_only
+        bd = r.breakdown
+        assert (bd.plan_point, bd.plan_bits, bd.plan_codec) == (-1, 0,
+                                                               "png")
+        assert (bd.plan_point2, bd.plan_bits2, bd.plan_codec2) == (-1, 0,
+                                                                   "")
+        assert bd.bytes_sent == bd.bytes_sent2 == expect_bytes
+        assert bd.edge_s == bd.edge_server_s == 0.0
+        assert bd.cloud_s == tri.cloud_exec_full()
+    full = np.asarray(eng.model.forward(params, batch))
+    np.testing.assert_allclose(np.asarray(done[0].logits
+                                          if done[0].batch is not None
+                                          else done[1].logits),
+                               full, rtol=2e-4, atol=2e-4)
+
+
+def test_serve_validates_device_ids(tri_setup):
+    srv, params, _, _ = tri_setup
+    server = ThreeTierServer(srv.engine, params, PROFILES)
+    with pytest.raises(ValueError):
+        server.serve([FleetRequest(uid=0, device_id=len(PROFILES),
+                                   batch=None, bandwidth=1e6)])
+    with pytest.raises(ValueError):
+        ThreeTierServer(srv.engine, params, [])
+
+
+# ---------------------------------------------------------------------------
+# the executable three-way split
+# ---------------------------------------------------------------------------
+
+def _tri_plan(point, bits, codec, point2, bits2, codec2):
+    return DecoupledPlan(point, bits, 0.0, 0.0, 0.0, codec=codec,
+                         point2=point2, bits2=bits2, codec2=codec2)
+
+
+def test_tri_runner_relay_is_byte_identical_to_two_tier(tri_setup):
+    """A diagonal (relay) plan must produce the SAME wire blob object on
+    both links and bitwise-identical logits to the two-tier runner with
+    the same (point, bits, codec) — exactly how the planner prices
+    diagonal cells."""
+    srv, params, cfg, _ = tri_setup
+    model = srv.engine.model
+    batch = make_batch(cfg, BATCH, 0, seed=11)
+    n = len(model.decoupling_points())
+    p = n // 2
+    tri_runner = TriDecoupledRunner(
+        model, params, _tri_plan(p, 8, "bitpack", p, 8, "bitpack"))
+    assert tri_runner.is_relay
+    blob, extras = tri_runner.device_step(batch)
+    blob2, extras2 = tri_runner.edge_server_step(blob, extras)
+    assert blob2 is blob                      # relayed unchanged
+    logits = np.asarray(tri_runner.cloud_step(blob2, extras2))
+    two = DecoupledRunner(model, params,
+                          DecoupledPlan(p, 8, 0.0, 0.0, 0.0,
+                                        codec="bitpack"))
+    ref_logits, nbytes = two.run(batch)
+    assert nbytes == blob.nbytes
+    np.testing.assert_array_equal(logits, np.asarray(ref_logits))
+
+
+def test_tri_runner_two_cut_close_to_full(tri_setup):
+    """head -> codec -> segment -> codec -> tail with a real middle
+    segment: 8-bit boundaries on both links keep predictions aligned
+    with the full forward pass."""
+    srv, params, cfg, _ = tri_setup
+    model = srv.engine.model
+    batch = make_batch(cfg, BATCH, 0, seed=12)
+    full = np.asarray(model.forward(params, batch))
+    n = len(model.decoupling_points())
+    runner = TriDecoupledRunner(
+        model, params,
+        _tri_plan(n // 3, 8, "bitpack", (2 * n) // 3, 8, "bitpack"))
+    assert not runner.is_relay
+    blob, extras = runner.device_step(batch)
+    blob2, extras = runner.edge_server_step(blob, extras)
+    logits = np.asarray(runner.cloud_step(blob2, extras))
+    assert logits.shape == full.shape
+    assert (logits.argmax(-1) == full.argmax(-1)).mean() > 0.9
+
+
+def test_tri_runner_rejects_bad_plans(tri_setup):
+    srv, params, _, _ = tri_setup
+    model = srv.engine.model
+    with pytest.raises(ValueError):
+        TriDecoupledRunner(model, params,
+                           DecoupledPlan(3, 8, 0.0, 0.0, 0.0))
+    with pytest.raises(ValueError):
+        TriDecoupledRunner(model, params,
+                           _tri_plan(5, 8, "bitpack", 2, 8, "bitpack"))

@@ -1,0 +1,407 @@
+"""The three-tier plan space pinned to its oracles: the fused two-cut
+``TriPlanSpace.decide`` must agree cell-for-cell with the brute-force
+``solve_tri_enumeration`` loop and the generic ILP solvers (including
+under an energy budget); the ``degenerate()`` view at ``BW1 = inf`` must
+reproduce the two-tier ``PlanSpace`` bitwise (scalar, fleet and
+streaming); and ``TriFleetPlanSpace.decide_all`` must agree with D
+independent scalar solves on per-device views."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.codec import list_codecs
+from repro.config.types import (
+    CLOUD_1080TI,
+    EDGE_TX2,
+    DeviceProfile,
+    TierPowerModel,
+)
+from repro.core.ilp import solve_branch_and_bound, solve_enumeration
+from repro.core.latency import LatencyModel
+from repro.core.planner import FleetPlanSpace, PlanSpace, _readonly
+from repro.core.tri_planner import (
+    TriFleetPlanSpace,
+    TriPlanSpace,
+    solve_tri_enumeration,
+)
+
+
+def random_setup(seed, budget=None, energy_weight=None, real_codecs=False):
+    """(tables, latency, budget, edge_server) drawn from one seed. With
+    ``real_codecs`` the codec axis uses registered codecs so streaming
+    terms can price token frames."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 10))
+    c = int(rng.integers(1, 4))
+    if real_codecs:
+        codecs = list(list_codecs())[: int(rng.integers(1, 4))]
+    else:
+        codecs = [f"codec{i}" for i in range(int(rng.integers(1, 4)))]
+    from repro.core.predictor import PredictorTables
+
+    fmacs = rng.random(n) * 1e9 + 1e8
+    lat = LatencyModel(fmacs, EDGE_TX2, CLOUD_1080TI, input_bytes=150_528.0)
+    tables = PredictorTables(
+        points=[f"p{i}" for i in range(n)],
+        bits_choices=[2 + i for i in range(c)],
+        codecs=codecs,
+        acc_drop=rng.random((n, c, len(codecs))) * 0.3,
+        size_bytes=rng.random((n, c, len(codecs))) * 1e6 + 1e3,
+        base_accuracy=0.9,
+    )
+    budget = budget if budget is not None else float(rng.random() * 0.3)
+    es = DeviceProfile("es", float(rng.uniform(5e11, 8e12)),
+                       float(rng.uniform(0.7, 1.6)))
+    power = TierPowerModel(
+        device_w=float(rng.uniform(1, 10)),
+        edge_server_w=float(rng.uniform(30, 120)),
+        cloud_w=float(rng.uniform(100, 400)),
+        tx1_w=float(rng.uniform(0.5, 3)),
+        tx2_w=float(rng.uniform(1, 6)),
+    )
+    if energy_weight is None:
+        energy_weight = float(rng.choice([0.0, rng.uniform(0.0, 50.0)]))
+    return tables, lat, budget, es, power, energy_weight
+
+
+def random_tri(seed, **kw) -> TriPlanSpace:
+    tables, lat, budget, es, power, lam = random_setup(seed, **kw)
+    return TriPlanSpace.build(tables, lat, budget, edge_server=es,
+                              power=power, energy_weight=lam)
+
+
+def random_bandwidths(seed, k=2):
+    rng = np.random.default_rng(seed ^ 0xB3)
+    return [float(10 ** rng.uniform(3.0, 8.5)) for _ in range(k)]
+
+
+def plan_flat(tri, plan):
+    q, j1, j2 = tri._cell_of_plan(plan)
+    return (q * tri.n_inner + j1) * tri.n_inner + j2
+
+
+def replace_device(tri, device):
+    """Per-device scalar view: same pair grid, different first tier."""
+    dev_vec = _readonly(device.w * tri.cum_fmacs / device.flops)
+    return replace(tri, device=device, dev_vec=dev_vec,
+                   mid_vec=None).finalize()
+
+
+def assert_tri_plans_equal(got, ref, ctx=""):
+    assert (got.point, got.bits, got.codec) == \
+        (ref.point, ref.bits, ref.codec), ctx
+    assert (got.point2, got.bits2, got.codec2) == \
+        (ref.point2, ref.bits2, ref.codec2), ctx
+    assert got.predicted_latency == ref.predicted_latency, ctx
+
+
+# ---------------------------------------------------------------------------
+# fused decide vs brute force + generic ILP solvers
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_decide_matches_bruteforce(seed):
+    """One fused argmin over the (P, CK²) grid == the python triple loop
+    re-deriving every cell from the component vectors: same winning
+    cell, bitwise-identical objective."""
+    tri = random_tri(seed)
+    bw1, bw2 = random_bandwidths(seed)
+    plan = tri.decide(bw1, bw2)
+    ref = solve_tri_enumeration(tri, bw1, bw2)
+    if ref is None:
+        assert plan.is_cloud_only
+        assert plan.predicted_latency == tri.cloud_only_time(bw1, bw2)
+        return
+    f, cost = ref
+    assert plan_flat(tri, plan) == f
+    assert plan.predicted_latency == cost
+    assert plan.predicted_acc_drop == float(tri.acc.flat[f])
+    assert tri.plan_cost(plan, bw1, bw2) == cost
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_decide_matches_generic_ilp_solvers(seed):
+    """The same selection through the generic ILPProblem oracles —
+    enumeration AND branch-and-bound — materializes the same plan at the
+    same objective."""
+    tri = random_tri(seed)
+    bw1, bw2 = random_bandwidths(seed)
+    plan = tri.decide(bw1, bw2)
+    prob = tri.ilp_problem(bw1, bw2)
+    for solver in (solve_enumeration, solve_branch_and_bound):
+        sol = solver(prob)
+        if sol is None:
+            assert plan.is_cloud_only
+            continue
+        got = tri.plan_from_solution(sol)
+        assert_tri_plans_equal(got, plan, ctx=solver.__name__)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_energy_budget_matches_bruteforce(seed):
+    """The energy-budget mask (the one term that can't be precomputed —
+    transmit joules depend on BW) excludes exactly the cells the scalar
+    energy model excludes, and the surviving argmin matches brute force
+    and the ILP resource-row oracle."""
+    tri = random_tri(seed)
+    bw1, bw2 = random_bandwidths(seed)
+    free = tri.decide(bw1, bw2)
+    if free.is_cloud_only:
+        return
+    rng = np.random.default_rng(seed ^ 0xE)
+    eb = tri.energy_of(free, bw1, bw2) * float(rng.uniform(0.2, 1.2))
+    plan = tri.decide(bw1, bw2, energy_budget=eb)
+    ref = solve_tri_enumeration(tri, bw1, bw2, energy_budget=eb)
+    if ref is None:
+        assert plan.is_cloud_only
+    else:
+        f, cost = ref
+        assert plan_flat(tri, plan) == f
+        assert plan.predicted_latency == cost
+        assert tri.energy_of(plan, bw1, bw2) <= eb
+    sol = solve_enumeration(tri.ilp_problem(bw1, bw2, energy_budget=eb))
+    if sol is None:
+        assert plan.is_cloud_only
+    else:
+        assert_tri_plans_equal(tri.plan_from_solution(sol), plan)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_infeasible_budget_is_cloud_only(seed):
+    """An unsatisfiable accuracy budget leaves only the x_NC = 1
+    fallback: input relayed over both links, full net on the cloud."""
+    tri = random_tri(seed, budget=-1.0)
+    bw1, bw2 = random_bandwidths(seed)
+    plan = tri.decide(bw1, bw2)
+    assert plan.is_cloud_only
+    assert plan.predicted_latency == tri.cloud_only_time(bw1, bw2)
+    assert solve_tri_enumeration(tri, bw1, bw2) is None
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_relay_cells_single_boundary(seed):
+    """Diagonal (i1 == i2) pairs model a relayed blob: only j1 == j2
+    cells are feasible and their accuracy drop is the SINGLE boundary's
+    (not doubled)."""
+    tri = random_tri(seed)
+    ck = tri.n_inner
+    acc = tri.acc.reshape(tri.n_pairs, ck, ck)
+    for q in np.nonzero(tri.i1_idx == tri.i2_idx)[0]:
+        i = tri.i1_idx[q]
+        for j in range(ck):
+            assert acc[q, j, j] == tri.acc_flat[i, j]
+        off = ~np.eye(ck, dtype=bool)
+        assert np.all(np.isinf(acc[q][off]))
+
+
+# ---------------------------------------------------------------------------
+# degenerate view == the two-tier planner, bitwise
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=60, deadline=None)
+def test_degenerate_reproduces_two_tier_bitwise(seed):
+    """``degenerate().decide(inf, BW)`` == ``PlanSpace.decide(BW)`` down
+    to the float bits: same cell, same objective, same acc drop — the
+    two-tier API is a derived view, not a parallel implementation."""
+    tables, lat, budget, es, power, _ = random_setup(seed)
+    space = PlanSpace.build(tables, lat, budget)
+    tri = TriPlanSpace.build(tables, lat, budget, edge_server=es,
+                             power=power, energy_weight=0.0)
+    deg = tri.degenerate()
+    bw = random_bandwidths(seed, 1)[0]
+    got = deg.decide(float("inf"), bw)
+    ref = space.decide(bw)
+    assert got.predicted_latency == ref.predicted_latency
+    assert got.predicted_acc_drop == ref.predicted_acc_drop
+    if ref.is_cloud_only:
+        assert got.is_cloud_only
+        assert deg.cloud_only_time(float("inf"), bw) == \
+            space.cloud_only_time(bw)
+    else:
+        assert (got.point, got.bits, got.codec) == \
+            (ref.point, ref.bits, ref.codec)
+        # the relay plan's second boundary is the first one, unchanged
+        assert (got.point2, got.bits2, got.codec2) == \
+            (ref.point, ref.bits, ref.codec)
+        # raw stage times: relay's middle tier costs exactly nothing
+        t_dev, t_es, t_cl = deg.stage_times(got)
+        e_ref, c_ref = space.stage_times(ref)
+        assert t_es == 0.0
+        assert (t_dev, t_cl) == (e_ref, c_ref)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_degenerate_fleet_reproduces_two_tier_bitwise(seed):
+    """The fleet plane inherits the degenerate pin: a TriFleetPlanSpace
+    over the diagonal view at BW1 = inf decides bitwise with
+    FleetPlanSpace.decide_all, device for device."""
+    tables, lat, budget, es, power, _ = random_setup(seed)
+    space = PlanSpace.build(tables, lat, budget)
+    deg = TriPlanSpace.build(tables, lat, budget, edge_server=es,
+                             power=power, energy_weight=0.0).degenerate()
+    rng = np.random.default_rng(seed ^ 0xF1)
+    d = int(rng.integers(1, 20))
+    profiles = [DeviceProfile(f"dev-{i}", float(rng.uniform(1e11, 8e12)),
+                              float(rng.uniform(0.7, 1.6)))
+                for i in range(d)]
+    bws = 10 ** rng.uniform(3.0, 8.5, d)
+    two = FleetPlanSpace.build(space, profiles).decide_all(bws)
+    tri = TriFleetPlanSpace.build(deg, profiles).decide_all(
+        np.full(d, np.inf), bws)
+    for i in range(d):
+        a, b = tri.plan(i), two.plan(i)
+        assert a.predicted_latency == b.predicted_latency, i
+        if b.is_cloud_only:
+            assert a.is_cloud_only, i
+        else:
+            assert (a.point, a.bits, a.codec) == \
+                (b.point, b.bits, b.codec), i
+            assert (a.point2, a.bits2, a.codec2) == \
+                (b.point, b.bits, b.codec), i
+
+
+# ---------------------------------------------------------------------------
+# fleet decide_all vs D scalar solves
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_fleet_decide_all_matches_scalar_oracle(seed):
+    """One chunked (D, n_cells) argmin over the Pareto-kept two-cut grid
+    == D independent scalar decides on per-device views: same plans,
+    bitwise-identical objectives."""
+    tri = random_tri(seed)
+    rng = np.random.default_rng(seed ^ 0xD3)
+    d = int(rng.integers(1, 25))
+    profiles = [DeviceProfile(f"dev-{i}", float(rng.uniform(1e11, 8e12)),
+                              float(rng.uniform(0.7, 1.6)))
+                for i in range(d)]
+    fleet = TriFleetPlanSpace.build(tri, profiles)
+    bw1 = 10 ** rng.uniform(3.0, 8.5, d)
+    bw2 = 10 ** rng.uniform(3.0, 8.5, d)
+    decision = fleet.decide_all(bw1, bw2)
+    assert len(decision) == d
+    cost = fleet.plan_cost_all(decision.cell, bw1, bw2)
+    dev_t, es_t, cl_t = fleet.stage_times_all(decision.cell)
+    for i in range(d):
+        view = replace_device(tri, profiles[i])
+        ref = view.decide(float(bw1[i]), float(bw2[i]))
+        got = decision.plan(i)
+        assert got.predicted_latency == ref.predicted_latency, i
+        assert decision.cost[i] == ref.predicted_latency, i
+        assert cost[i] == view.plan_cost(ref, float(bw1[i]),
+                                         float(bw2[i])), i
+        if ref.is_cloud_only:
+            assert got.is_cloud_only, i
+        else:
+            assert_tri_plans_equal(got, ref, ctx=f"device {i}")
+        assert (dev_t[i], es_t[i], cl_t[i]) == view.stage_times(ref), i
+
+
+def test_fleet_build_rejects_mixed_inputs():
+    tri = random_tri(5)
+    profiles = [EDGE_TX2]
+    with pytest.raises(ValueError):
+        TriFleetPlanSpace.build(tri, profiles, flops=np.ones(1))
+    with pytest.raises(ValueError):
+        TriFleetPlanSpace.build(tri)
+    with pytest.raises(ValueError):
+        TriFleetPlanSpace.build(tri, flops=np.ones(2), w=np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# streaming terms: degenerate pin + ILP oracle
+# ---------------------------------------------------------------------------
+
+def _stream_pair(seed):
+    tables, lat, budget, es, power, _ = random_setup(seed, real_codecs=True)
+    space = PlanSpace.build(tables, lat, budget)
+    tri = TriPlanSpace.build(tables, lat, budget, edge_server=es,
+                             power=power, energy_weight=0.0)
+    rng = np.random.default_rng(seed ^ 0x5F)
+    d_model = int(rng.integers(8, 512))
+    tpb = float(rng.integers(1, 64))
+    e_tok = float(rng.integers(1, 256))
+    return space, tri, d_model, tpb, e_tok
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_stream_degenerate_reproduces_two_tier_bitwise(seed):
+    """Two per-token streams collapse to the two-tier StreamPlanTerms at
+    BW1 = inf over the degenerate view — same plan, bitwise objective."""
+    space, tri, d_model, tpb, e_tok = _stream_pair(seed)
+    two = space.with_streaming(d_model, tpb)
+    terms = tri.degenerate().with_streaming(d_model, tpb)
+    bw = random_bandwidths(seed, 1)[0]
+    got = terms.decide(float("inf"), bw, e_tok)
+    ref = two.decide(bw, e_tok)
+    assert got.predicted_latency == ref.predicted_latency
+    if ref.is_cloud_only:
+        assert got.is_cloud_only
+        assert terms.cloud_only_stream_time(float("inf"), bw, e_tok) == \
+            two.cloud_only_stream_time(bw, e_tok)
+    else:
+        assert (got.point, got.bits, got.codec) == \
+            (ref.point, ref.bits, ref.codec)
+        assert terms.token_time(got, float("inf"), bw) == \
+            two.token_time(ref, bw)
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_stream_decide_matches_ilp_oracle(seed):
+    """The fused streaming argmin == the generic enumeration solver on
+    the streaming ILPProblem, at asymmetric link bandwidths."""
+    _, tri, d_model, tpb, e_tok = _stream_pair(seed)
+    terms = tri.with_streaming(d_model, tpb)
+    bw1, bw2 = random_bandwidths(seed)
+    plan = terms.decide(bw1, bw2, e_tok)
+    sol = solve_enumeration(terms.ilp_problem(bw1, bw2, e_tok))
+    if sol is None:
+        assert plan.is_cloud_only
+        assert plan.predicted_latency == \
+            terms.cloud_only_stream_time(bw1, bw2, e_tok)
+    else:
+        assert_tri_plans_equal(terms.plan_from_solution(sol), plan)
+
+
+# ---------------------------------------------------------------------------
+# mesh on the tail tier
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_with_cloud_mesh_identity_and_tail_only(seed):
+    """A 1-device, zero-collective mesh is a bitwise no-op; a real mesh
+    rescales ONLY the cloud tail vector (device and middle tiers keep
+    their bits), and meshed views never compound."""
+    from repro.core.planner import CloudMeshModel
+
+    tri = random_tri(seed)
+    bw1, bw2 = random_bandwidths(seed)
+    ident = tri.with_cloud_mesh(CloudMeshModel(1, 0.0))
+    a, b = tri.decide(bw1, bw2), ident.decide(bw1, bw2)
+    assert a.predicted_latency == b.predicted_latency
+    mesh = CloudMeshModel(4, 1e-5)
+    meshed = tri.with_cloud_mesh(mesh)
+    assert np.array_equal(meshed.dev_vec, tri.dev_vec)
+    assert np.array_equal(meshed.mid_vec, tri.mid_vec)
+    again = meshed.with_cloud_mesh(mesh)
+    assert np.array_equal(again.cl_vec, meshed.cl_vec)
+    plan = meshed.decide(bw1, bw2)
+    ref = solve_tri_enumeration(meshed, bw1, bw2)
+    if ref is None:
+        assert plan.is_cloud_only
+    else:
+        assert plan_flat(meshed, plan) == ref[0]
+        assert plan.predicted_latency == ref[1]

@@ -120,6 +120,46 @@ def test_flash_crowd_shapes_load_and_bandwidth():
     assert not steady.in_flash_window(steady.arrival_s).any()
 
 
+def test_link2_walks_deterministic_and_bounded():
+    """Three-tier traces: the second-link walk comes from the SAME rng
+    stream (deterministic per seed), honors its own (mean, bounds)
+    shaping, and fills per-request ``bandwidth2`` from the walk at the
+    arrival step."""
+    a = make_trace(6, 50, seed=31, link2=True, dt_s=0.1,
+                   lo2_bps=2e6, hi2_bps=80e6)
+    b = make_trace(6, 50, seed=31, link2=True, dt_s=0.1,
+                   lo2_bps=2e6, hi2_bps=80e6)
+    assert a.has_link2 and a.bw2_walks.shape == a.bw_walks.shape
+    assert np.array_equal(a.bw2_walks, b.bw2_walks)
+    assert np.array_equal(a.bandwidths2, b.bandwidths2)
+    assert np.all((a.bw2_walks >= 2e6) & (a.bw2_walks <= 80e6))
+    assert np.all(a.bw2_walks.std(axis=0) > 0)
+    # the two links drift independently: not the same series scaled
+    assert not np.array_equal(a.bw2_walks, a.bw_walks)
+    for d in range(a.n_devices):
+        mine = a.device_ids == d
+        assert np.array_equal(a.bandwidths2[mine],
+                              a.bw2_walks[a.step_ids[mine], d])
+    reqs = a.requests()
+    assert [r.bandwidth2 for r in reqs] == list(a.bandwidths2)
+
+
+def test_link2_false_traces_bit_identical_to_before():
+    """``link2=False`` must not consume rng draws: the two-tier trace is
+    bit-identical with and without the second-link feature compiled in,
+    and a ``link2=True`` trace of the same seed shares the FIRST link's
+    walk exactly (the second walk is drawn after it, before arrivals)."""
+    two = make_trace(7, 40, seed=19, kind="flash_crowd")
+    tri = make_trace(7, 40, seed=19, kind="flash_crowd", link2=True)
+    assert not two.has_link2
+    assert two.bandwidths2 is None
+    assert np.array_equal(two.bw_walks, tri.bw_walks)
+    assert np.array_equal(two.rates, tri.rates)
+    # link2 walks perturb the shared stream only AFTER the first walk —
+    # arrival sampling shifts, but the link-1 walk itself is pinned
+    assert all(r.bandwidth2 == 0.0 for r in two.requests())
+
+
 def test_flash_crowd_fires_adaptation_events():
     """Driving the vectorized fleet controller with a flash-crowd trace
     re-decouples at least one device inside the drop window — the trace
